@@ -1,0 +1,64 @@
+"""Shared benchmark scaffolding: tables, claim checks, fast/full knob."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+
+MODELS_TRAIN = ["bert", "qwen3-0.6b", "qwen3-1.7b", "qwen-omni"]
+MODELS_INFER = ["qwen3-0.6b", "qwen3-1.7b", "qwen-omni"]
+SETTINGS = ["smart_home_1", "smart_home_2", "traffic_monitor", "edge_cluster"]
+
+if QUICK:
+    MODELS_TRAIN = ["bert", "qwen3-0.6b"]
+    MODELS_INFER = ["qwen3-0.6b"]
+    SETTINGS = ["smart_home_2", "edge_cluster"]
+
+
+class Claim:
+    """One paper claim validated by a harness."""
+
+    def __init__(self, text: str):
+        self.text = text
+        self.ok: Optional[bool] = None
+        self.detail = ""
+
+    def check(self, ok: bool, detail: str = "") -> None:
+        self.ok = bool(ok)
+        self.detail = detail
+
+    def line(self) -> str:
+        mark = {"None": "SKIP", "True": "PASS", "False": "FAIL"}[str(self.ok)]
+        return f"[{mark}] {self.text}" + (f" — {self.detail}" if self.detail else "")
+
+
+def table(headers: Sequence[str], rows: Sequence[Sequence], title: str = ""
+          ) -> str:
+    cols = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+            else len(str(h)) for i, h in enumerate(headers)]
+    out = []
+    if title:
+        out.append(f"\n== {title} ==")
+    out.append("  ".join(str(h).ljust(c) for h, c in zip(headers, cols)))
+    out.append("  ".join("-" * c for c in cols))
+    for r in rows:
+        out.append("  ".join(str(v).ljust(c) for v, c in zip(r, cols)))
+    return "\n".join(out)
+
+
+def ms(x: float) -> str:
+    return f"{x * 1e3:.1f}"
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

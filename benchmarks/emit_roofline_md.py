@@ -1,0 +1,48 @@
+"""Append the §Roofline markdown table (from dryrun_results.jsonl) to
+EXPERIMENTS.md. Run after the dry-run:
+
+    PYTHONPATH=src python -m benchmarks.emit_roofline_md
+"""
+from __future__ import annotations
+
+import os
+
+from .roofline import load_results, model_flops
+
+HERE = os.path.dirname(__file__)
+EXP = os.path.join(HERE, "..", "EXPERIMENTS.md")
+
+
+def build_table() -> str:
+    recs = load_results()
+    lines = ["", "| arch | shape | mesh | Tc (ms) | Tm (ms) | Tn (ms) | "
+             "bound | useful/HLO | peak GB |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rl = r["roofline"]
+        ratio = model_flops(r["arch"], r["shape"], r["devices"]) \
+            / max(r["per_device_flops"], 1.0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rl['t_compute'] * 1e3:.1f} | {rl['t_memory'] * 1e3:.1f} "
+            f"| {rl['t_collective'] * 1e3:.1f} | {rl['bound']} "
+            f"| {ratio:.2f} | {r['memory']['peak_gb']:.1f} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    with open(EXP) as f:
+        text = f.read()
+    marker = "## §Roofline-table"
+    head = text.split(marker)[0]
+    intro = ("## §Roofline-table\n\n(Generated from the final "
+             "`dryrun_results.jsonl`; both meshes, Tc/Tm/Tn per step.)\n")
+    with open(EXP, "w") as f:
+        f.write(head + intro + build_table())
+    print("EXPERIMENTS.md §Roofline-table updated "
+          f"({len(load_results())} rows)")
+
+
+if __name__ == "__main__":
+    main()

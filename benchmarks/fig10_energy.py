@@ -1,0 +1,53 @@
+"""Fig. 10/11 — energy under QoE.
+
+Per the paper: the QoE target is 0.8× the best baseline's *speed*
+(i.e. T_QoE = baseline latency / 0.8 — a 25% latency slack); Dora then
+minimizes energy subject to that target (Eq. 1/2). Savings are reported
+against the best baseline's plan energy. Paper: 15–82%.
+"""
+from __future__ import annotations
+
+from .common import MODELS_INFER, MODELS_TRAIN, SETTINGS, Claim, table
+
+from repro.core.qoe import QoESpec
+from repro.sim.runner import (best_baseline, compare_planners, dora_plan,
+                              setting_and_graph, workload_for)
+
+
+def _one(mode, models, report, fig):
+    rows, savings = [], []
+    cached = report.data.get("fig8" if mode == "train" else "fig9", {})
+    for model in models:
+        for setting in SETTINGS:
+            topo, graph = setting_and_graph(setting, model, mode)
+            wl = workload_for(mode)
+            res = cached.get((model, setting)) or compare_planners(
+                graph, topo, wl)
+            try:
+                bname, bb = best_baseline(res)
+            except RuntimeError:
+                continue
+            qoe = QoESpec(t_qoe=bb.latency / 0.8, lam=bb.energy / bb.latency)
+            saver = dora_plan(graph, topo, qoe, wl).best
+            met = saver.latency <= qoe.t_qoe * 1.01
+            sv = 1.0 - saver.energy / bb.energy
+            savings.append(sv)
+            rows.append([model, setting, bname, f"{bb.energy:.1f}",
+                         f"{saver.energy:.1f}", f"{sv:+.1%}",
+                         "yes" if met else "NO"])
+    report.add_table(table(
+        ["model", "setting", "best bl", "E_bl (J)", "E_dora (J)", "saving",
+         "QoE met"], rows, f"{fig} — energy under QoE ({mode})"))
+    return savings
+
+
+def run(report) -> None:
+    s_train = _one("train", MODELS_TRAIN, report, "Fig. 11")
+    s_infer = _one("infer", MODELS_INFER, report, "Fig. 10")
+    allv = s_train + s_infer
+    c = Claim("Fig10/11: Dora saves energy while meeting T_QoE = 0.8× best "
+              "baseline (paper: 15–82%)")
+    c.check(max(allv) >= 0.15 and sum(v > 0 for v in allv) >= len(allv) * 0.7,
+            f"savings {min(allv):+.1%}–{max(allv):+.1%}, "
+            f"{sum(v > 0 for v in allv)}/{len(allv)} cells positive")
+    report.add_claims([c])

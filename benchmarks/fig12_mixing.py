@@ -1,0 +1,62 @@
+"""Fig. 12 — long-horizon multi-plan orchestration.
+
+A 6000-iteration tuning job in Smart Home 2 under deadlines from loose
+to tight: the Runtime Adapter's plan *mixture* vs the best single plan
+meeting each deadline. Paper: up to 31.8% lower energy.
+"""
+from __future__ import annotations
+
+import math
+
+from .common import Claim, table
+
+from repro.core.qoe import QoESpec
+from repro.sim.runner import dora_plan, setting_and_graph, workload_for
+from repro.core.adapter import RuntimeAdapter
+from repro.core.scheduler import NetworkScheduler
+
+ITERS = 6000.0
+
+
+def run(report) -> None:
+    topo, graph = setting_and_graph("smart_home_2", "qwen3-0.6b", "train")
+    wl = workload_for("train")
+    qoe = QoESpec(t_qoe=math.inf, lam=1.0)
+    res = dora_plan(graph, topo, qoe, wl, top_k=10)
+    plans = res.pareto
+    sched = NetworkScheduler(topo, qoe)
+
+    # deadlines BETWEEN adjacent solo-completion times: feasible for the
+    # faster plan, infeasible for the slower one — the regime where a
+    # single plan must over-deliver but a mixture harvests the cheaper
+    # plan for part of the horizon (the paper's 6.7 h case)
+    solo = sorted({ITERS * p.latency for p in plans})
+    deadlines = sorted({a + (b - a) * f
+                        for a, b in zip(solo[:-1], solo[1:])
+                        for f in (0.5, 0.9)})
+    if not deadlines:
+        deadlines = [solo[0] * 1.2]
+    rows, gains = [], []
+    for dl in deadlines:
+        # best single plan that makes the deadline = min energy among feasible
+        feasible = [p for p in plans if ITERS * p.latency <= dl]
+        single = min(feasible, key=lambda p: p.energy) if feasible else None
+        single_e = ITERS * single.energy if single else float("inf")
+
+        adapter = RuntimeAdapter(plans, topo, qoe, sched)
+        out = adapter.run_interruptible(ITERS, dl, horizon=dl / 60.0)
+        mix_e = out["energy"]
+        gain = 1.0 - mix_e / single_e if single else 0.0
+        gains.append(gain)
+        rows.append([f"{dl / 3600:.2f}", f"{single_e:.0f}" if single else "—",
+                     f"{mix_e:.0f}", f"{gain:+.1%}",
+                     "yes" if out["met_deadline"] else "NO"])
+    report.add_table(table(
+        ["deadline (h)", "best single (J)", "Dora mixture (J)", "gain",
+         "deadline met"], rows,
+        "Fig. 12 — 6000-iteration job, energy vs deadline"))
+
+    c = Claim("Fig12: plan mixing beats the best single plan under at least "
+              "one deadline regime (paper: up to 31.8%)")
+    c.check(max(gains) > 0.02, f"best gain {max(gains):+.1%}")
+    report.add_claims([c])

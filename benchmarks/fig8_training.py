@@ -1,0 +1,42 @@
+"""Fig. 8 — training latency: Dora vs 4 baselines across 4 settings ×
+4 models. Paper claim: 1.1–6.3× faster than the best baseline."""
+from __future__ import annotations
+
+from .common import MODELS_TRAIN, SETTINGS, Claim, ms, table
+
+from repro.sim.runner import (best_baseline, compare_planners,
+                              setting_and_graph, workload_for)
+
+PLANNERS = ["edgeshard", "alpa", "metis", "asteroid", "dora"]
+
+
+def run(report) -> None:
+    rows = []
+    speedups = []
+    results = {}
+    for model in MODELS_TRAIN:
+        for setting in SETTINGS:
+            topo, graph = setting_and_graph(setting, model, "train")
+            res = compare_planners(graph, topo, workload_for("train"))
+            results[(model, setting)] = res
+            row = [model, setting]
+            for p in PLANNERS:
+                row.append(ms(res[p].latency) if res[p].ok else "OOM")
+            try:
+                _, bb = best_baseline(res)
+                sp = bb.latency / res["dora"].latency
+                speedups.append(sp)
+                row.append(f"{sp:.2f}x")
+            except RuntimeError:
+                row.append("n/a")
+            rows.append(row)
+    report.add_table(table(
+        ["model", "setting"] + [f"{p} (ms)" for p in PLANNERS] + ["speedup"],
+        rows, "Fig. 8 — training iteration latency"))
+
+    c = Claim("Fig8: Dora never slower than the best baseline; speedups in "
+              "the paper's 1.1–6.3× band on contended settings")
+    c.check(min(speedups) >= 0.999 and max(speedups) >= 1.1,
+            f"range {min(speedups):.2f}–{max(speedups):.2f}×")
+    report.add_claims([c])
+    report.stash("fig8", results)

@@ -1,0 +1,38 @@
+"""Fig. 9 — serving latency: Dora vs baselines. Paper: 1.2–2.8×."""
+from __future__ import annotations
+
+from .common import MODELS_INFER, SETTINGS, Claim, ms, table
+
+from repro.sim.runner import (best_baseline, compare_planners,
+                              setting_and_graph, workload_for)
+
+PLANNERS = ["edgeshard", "alpa", "metis", "asteroid", "dora"]
+
+
+def run(report) -> None:
+    rows, speedups, results = [], [], {}
+    for model in MODELS_INFER:
+        for setting in SETTINGS:
+            topo, graph = setting_and_graph(setting, model, "infer")
+            res = compare_planners(graph, topo, workload_for("infer"))
+            results[(model, setting)] = res
+            row = [model, setting]
+            for p in PLANNERS:
+                row.append(ms(res[p].latency) if res[p].ok else "OOM")
+            try:
+                _, bb = best_baseline(res)
+                sp = bb.latency / res["dora"].latency
+                speedups.append(sp)
+                row.append(f"{sp:.2f}x")
+            except RuntimeError:
+                row.append("n/a")
+            rows.append(row)
+    report.add_table(table(
+        ["model", "setting"] + [f"{p} (ms)" for p in PLANNERS] + ["speedup"],
+        rows, "Fig. 9 — serving batch latency"))
+
+    c = Claim("Fig9: Dora 1.2–2.8×-band faster serving than best baseline")
+    c.check(min(speedups) >= 0.999 and max(speedups) >= 1.2,
+            f"range {min(speedups):.2f}–{max(speedups):.2f}×")
+    report.add_claims([c])
+    report.stash("fig9", results)

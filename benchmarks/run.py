@@ -1,0 +1,80 @@
+"""Run every benchmark harness; print tables + per-claim verdicts.
+
+    PYTHONPATH=src python -m benchmarks.run            # full
+    BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run   # smoke
+
+Each module maps to one paper table/figure (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+import time
+import traceback
+from typing import Dict, List
+
+from .common import Claim
+
+HARNESSES = [
+    "fig2_contention",
+    "fig8_training",
+    "fig9_inference",
+    "fig10_energy",
+    "fig12_mixing",
+    "fig13_scheduler",
+    "fig14_breakdown",
+    "fig15_pareto",
+    "fig16_dynamics",
+    "fig17_topk",
+    "table4_planning_time",
+    "roofline",
+]
+
+
+class Report:
+    def __init__(self):
+        self.tables: List[str] = []
+        self.claims: List[Claim] = []
+        self.data: Dict[str, object] = {}
+
+    def add_table(self, text: str) -> None:
+        self.tables.append(text)
+        print(text, flush=True)
+
+    def add_claims(self, claims) -> None:
+        self.claims.extend(claims)
+        for c in claims:
+            print(c.line(), flush=True)
+
+    def stash(self, key: str, value) -> None:
+        self.data[key] = value
+
+
+def main() -> int:
+    report = Report()
+    failures = []
+    for name in HARNESSES:
+        print(f"\n##### {name} " + "#" * max(0, 60 - len(name)), flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.run(report)
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"[ERROR] {name}: {type(e).__name__}: {e}")
+            traceback.print_exc()
+        print(f"({name}: {time.time() - t0:.1f}s)", flush=True)
+
+    print("\n" + "=" * 72)
+    print("CLAIM SUMMARY")
+    print("=" * 72)
+    n_pass = sum(1 for c in report.claims if c.ok)
+    for c in report.claims:
+        print(c.line())
+    print(f"\n{n_pass}/{len(report.claims)} claims validated; "
+          f"{len(failures)} harness errors {failures if failures else ''}")
+    return 1 if (failures or n_pass < len(report.claims)) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

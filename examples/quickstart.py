@@ -1,0 +1,45 @@
+"""Quickstart — QoE-aware planning in ~20 lines.
+
+Plan Qwen3-0.6B training for a smart home (2 laptops + 3 phones on
+shared WiFi) under a latency target, inspect the chosen hybrid-parallel
+plan, and see the energy/latency frontier the runtime adapter can mix.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.cost_model import Workload
+from repro.core.device import make_setting
+from repro.core.graph_builders import paper_model
+from repro.core.planner import DoraPlanner
+from repro.core.qoe import QoESpec
+
+
+def main() -> None:
+    topo = make_setting("smart_home_2")           # Table 3 deployment
+    graph = paper_model("qwen3-0.6b", seq_len=512)
+    qoe = QoESpec(t_qoe=8.0, lam=50.0)            # ≤8 s/iteration; λ = 50 J/s
+
+    planner = DoraPlanner(graph, topo, qoe)
+    result = planner.plan(Workload(global_batch=32, microbatch_size=4,
+                                   optimizer_mult=3.0))
+
+    print(f"planning took {result.total_s:.2f}s "
+          f"(phase1 {result.phase1_s:.2f}s + phase2 {result.phase2_s:.2f}s)\n")
+    print("BEST PLAN:", result.best.summary(), "\n")
+    print("Pareto frontier (for runtime mixing):")
+    for p in result.pareto:
+        print(f"  lat={p.latency * 1e3:7.1f} ms  energy={p.energy:7.1f} J  "
+              f"stages={p.n_stages} mb={p.microbatch_size}")
+
+    meets = result.best.latency <= qoe.t_qoe
+    print(f"\nQoE target {qoe.t_qoe:.1f}s: "
+          f"{'MET' if meets else 'VIOLATED'} "
+          f"({result.best.latency:.2f}s, {result.best.energy:.0f} J/iter)")
+
+
+if __name__ == "__main__":
+    main()

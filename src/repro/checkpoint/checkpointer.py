@@ -1,0 +1,172 @@
+"""Sharded, async, atomic checkpointing with elastic restore.
+
+Layout (tensorstore-style, one object per (leaf, shard)):
+
+    <dir>/step_000123.tmp/              — written first
+        MANIFEST.json                   — treedef, shapes, dtypes, specs
+        <leaf_id>.<shard_idx>.npy       — one file per addressable shard
+    <dir>/step_000123/                  — atomic rename on completion
+        COMMIT                          — marker: checkpoint is complete
+
+Restore targets may live on a *different* mesh (elastic restart after
+node loss): ``restore`` reassembles each leaf from its saved shards via
+``jax.make_array_from_callback`` against the new sharding.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_id(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return ".".join(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            commit = os.path.join(directory, name, "COMMIT")
+            if os.path.exists(commit):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, tree: Any, wait: bool = False) -> None:
+        """Snapshot leaves to host (cheap) then write in the background."""
+        leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+        snap: List[Tuple[str, List[Tuple[int, np.ndarray]], tuple, str]] = []
+        for path, leaf in leaves:
+            lid = _leaf_id(path)
+            shards = []
+            arr = leaf
+            if isinstance(arr, jax.Array):
+                for i, s in enumerate(arr.addressable_shards):
+                    shards.append((s.index, np.asarray(s.data)))
+            else:
+                shards.append(((slice(None),), np.asarray(arr)))
+            snap.append((lid, shards, tuple(leaf.shape), str(leaf.dtype)))
+        treedef = jax.tree_util.tree_structure(tree)
+
+        self.wait()
+        if self.async_save and not wait:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, snap, str(treedef)), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, snap, str(treedef))
+
+    def _write(self, step: int, snap, treedef_str: str) -> None:
+        final = os.path.join(self.dir, f"step_{step:06d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        manifest: Dict[str, Any] = {"step": step, "treedef": treedef_str,
+                                    "leaves": {}}
+        for lid, shards, shape, dtype in snap:
+            manifest["leaves"][lid] = {
+                "shape": list(shape), "dtype": dtype,
+                "shards": [_index_to_json(idx) for idx, _ in shards]}
+            for i, (_idx, data) in enumerate(shards):
+                if data.dtype == _np_dtype("bfloat16"):
+                    data = data.view(np.uint16)   # npy-portable bf16 encoding
+                np.save(os.path.join(tmp, f"{lid}.{i}.npy"), data)
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        with open(os.path.join(final, "COMMIT"), "w") as f:
+            f.write("ok")
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(s for s in (latest_step(self.dir),) if s is not None)
+        all_steps = sorted(int(n.split("_")[1]) for n in os.listdir(self.dir)
+                           if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in all_steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:06d}"),
+                          ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------------
+    def restore(self, step: int, target: Any) -> Any:
+        """``target``: pytree of jax.Arrays or ShapeDtypeStructs (possibly
+        on a different mesh than the checkpoint was saved from)."""
+        self.wait()
+        d = os.path.join(self.dir, f"step_{step:06d}")
+        if not os.path.exists(os.path.join(d, "COMMIT")):
+            raise FileNotFoundError(f"no committed checkpoint at {d}")
+        with open(os.path.join(d, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+
+        def load_leaf(path, leaf):
+            lid = _leaf_id(path)
+            meta = manifest["leaves"][lid]
+            shape = tuple(meta["shape"])
+            dt = np.dtype(_np_dtype(meta["dtype"]))
+            full = np.zeros(shape, dtype=dt)
+            for i, idx_json in enumerate(meta["shards"]):
+                data = np.load(os.path.join(d, f"{lid}.{i}.npy"))
+                if meta["dtype"] == "bfloat16":
+                    data = data.view(dt)          # undo the uint16 encoding
+                full[_json_to_index(idx_json)] = data
+            sharding = getattr(leaf, "sharding", None)
+            if sharding is not None:
+                # np.asarray keeps 0-d shapes (ascontiguousarray promotes
+                # scalars to (1,), which JAX rejects)
+                return jax.make_array_from_callback(
+                    shape, sharding,
+                    lambda idx: np.asarray(full[idx], order="C"))
+            return jax.numpy.asarray(full)
+
+        return jax.tree_util.tree_map_with_path(load_leaf, target)
+
+
+def _index_to_json(idx) -> List:
+    out = []
+    for s in idx:
+        if isinstance(s, slice):
+            out.append([s.start, s.stop, s.step])
+        else:
+            out.append(s)
+    return out
+
+
+def _json_to_index(idx_json) -> tuple:
+    return tuple(slice(*s) if isinstance(s, list) else s for s in idx_json)
+
+
+def _np_dtype(name: str):
+    if name == "bfloat16":
+        import ml_dtypes
+        return ml_dtypes.bfloat16
+    return name

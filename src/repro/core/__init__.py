@@ -1,0 +1,32 @@
+"""Dora core: QoE-aware hybrid parallelism planning (the paper's contribution).
+
+Public API:
+
+    graph   = graph_builders.paper_model("qwen3-1.7b", seq_len=512)
+    topo    = device.make_setting("smart_home_2")
+    qoe     = QoESpec(t_qoe=0.2, lam=50.0)
+    planner = DoraPlanner(graph, topo, qoe)
+    result  = planner.plan(Workload(global_batch=32, microbatch_size=4))
+    adapter = planner.make_adapter(result)
+"""
+from .adapter import AdapterConfig, DynamicsEvent, RuntimeAdapter, pareto_filter
+from .cost_model import CostModel, Workload
+from .device import CATALOG, DeviceProfile, LinkResource, Topology, make_setting
+from .engine import EventEngine, ScheduleResult, Task, chunk_comm_tasks
+from .graph_builders import GraphSpec, build_lm_graph, build_multimodal_graph, paper_model
+from .partitioner import ModelPartitioner, PartitionerConfig
+from .planner import DoraPlanner, PlanningResult
+from .planning_graph import LayerNode, ModelGraph
+from .plans import ParallelismPlan, Stage
+from .qoe import QoESpec
+from .scheduler import NetworkScheduler, SchedulerConfig
+
+__all__ = [
+    "AdapterConfig", "DynamicsEvent", "RuntimeAdapter", "pareto_filter",
+    "CostModel", "Workload", "CATALOG", "DeviceProfile", "LinkResource",
+    "Topology", "make_setting", "EventEngine", "ScheduleResult", "Task",
+    "chunk_comm_tasks", "GraphSpec", "build_lm_graph", "build_multimodal_graph",
+    "paper_model", "ModelPartitioner", "PartitionerConfig", "DoraPlanner",
+    "PlanningResult", "LayerNode", "ModelGraph", "ParallelismPlan", "Stage",
+    "QoESpec", "NetworkScheduler", "SchedulerConfig",
+]

@@ -1,0 +1,221 @@
+"""Phase 3 — runtime adapter (§4.3).
+
+Two deployment-driven paths:
+
+* **Interruptible workloads** (training/tuning): the *uniform-progress*
+  heuristic amortizes the deadline over horizons
+  (``EP_Δ = (Δ/D_rem)·W_rem``) and a small LP (Eqs. 7-8) picks a mixture
+  of Pareto-optimal plans that meets the horizon's progress at minimum
+  energy. Deficits from transient slowdowns are re-absorbed because the
+  next horizon recomputes ``W_rem/D_rem``.
+* **Continuous workloads** (serving): fluctuations below a threshold are
+  absorbed by re-running only the Phase-2 network scheduler (sub-second,
+  no model-state migration); larger shifts trigger replanning with
+  **asynchronous** (prefetch immutable weights during execution) and
+  **delta** (transfer only missing layers) switching.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+from scipy.optimize import linprog
+
+from .device import Topology
+from .plans import ParallelismPlan
+from .qoe import QoESpec
+from .scheduler import NetworkScheduler
+
+
+# -- dynamics events ------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DynamicsEvent:
+    """A runtime condition change at ``t`` (seconds)."""
+
+    t: float
+    compute_speed: Dict[str, float] = dataclasses.field(default_factory=dict)
+    bandwidth_scale: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def magnitude(self) -> float:
+        devs = [abs(1.0 - v) for v in self.compute_speed.values()]
+        bws = [abs(1.0 - v) for v in self.bandwidth_scale.values()]
+        return max(devs + bws + [0.0])
+
+
+@dataclasses.dataclass
+class AdapterConfig:
+    horizon_s: float = 60.0
+    fluctuation_threshold: float = 0.10     # §5: ≤10% → network-only replan
+    switch_drain_s: float = 2.0             # pipeline drain on plan switch
+    async_switching: bool = True
+    delta_switching: bool = True
+
+
+def pareto_filter(plans: Sequence[ParallelismPlan]) -> List[ParallelismPlan]:
+    """Keep plans Pareto-optimal in (latency, energy)."""
+    ranked = sorted(plans, key=lambda p: (p.latency, p.energy))
+    out: List[ParallelismPlan] = []
+    best_e = math.inf
+    for p in ranked:
+        if p.energy < best_e - 1e-12:
+            out.append(p)
+            best_e = p.energy
+    return out
+
+
+class RuntimeAdapter:
+    def __init__(self, plans: Sequence[ParallelismPlan], topo: Topology,
+                 qoe: QoESpec, scheduler: NetworkScheduler,
+                 config: Optional[AdapterConfig] = None):
+        if not plans:
+            raise ValueError("adapter needs at least one plan")
+        self.all_plans = list(plans)
+        self.plans = pareto_filter(plans)
+        self.topo = topo
+        self.qoe = qoe
+        self.scheduler = scheduler
+        self.config = config or AdapterConfig()
+
+    # -- switching cost (§4.3 async + delta) -------------------------------------
+    def switch_cost(self, old: Optional[ParallelismPlan],
+                    new: ParallelismPlan) -> float:
+        """Seconds of *service stall* incurred by switching old→new."""
+        if old is None or old is new:
+            return 0.0
+        cfg = self.config
+        if cfg.delta_switching:
+            old_layers = old.device_layers()
+            nbytes = 0.0
+            for st in new.stages:
+                per_param = st.param_bytes / max(len(st.node_ids), 1)
+                for d in st.devices:
+                    have = old_layers.get(d, frozenset())
+                    missing = [i for i in st.node_ids if i not in have]
+                    nbytes = max(nbytes, len(missing) * per_param)
+        else:
+            nbytes = max(new.device_param_bytes().values())
+        # conservative: weights stream at the slowest involved peak bandwidth
+        bw = min((self.topo.peak_bandwidth(i, j)
+                  for i in new.devices for j in new.devices if i != j),
+                 default=math.inf)
+        load_t = nbytes / bw if bw != math.inf else 0.0
+        if cfg.async_switching:
+            # prefetch overlaps with ongoing execution; stall is the drain
+            return cfg.switch_drain_s + max(0.0, load_t - old.latency)
+        return cfg.switch_drain_s + load_t
+
+    # -- Eqs. (7)-(8): horizon mixture LP -----------------------------------------
+    def mix_for_horizon(self, w_rem: float, d_rem: float,
+                        current: Optional[ParallelismPlan] = None,
+                        horizon: Optional[float] = None
+                        ) -> List[Tuple[ParallelismPlan, float]]:
+        """Fractions x_p of the horizon per plan meeting EP_Δ at min energy.
+
+        ``w_rem`` — remaining work in iterations; ``d_rem`` — seconds to
+        deadline. Returns [(plan, fraction)] with Σ fraction ≤ 1.
+        """
+        delta = min(horizon or self.config.horizon_s, max(d_rem, 1e-9))
+        # pace to finish slightly early: switching stalls and horizon
+        # rounding otherwise push completion just past the deadline
+        d_eff = max(d_rem * 0.97, 1e-9)
+        ep = min((delta / d_eff) * w_rem, w_rem)       # expected progress
+        P = self.plans
+        rate = np.array([1.0 / p.latency for p in P])            # iters/sec
+        e_rate = np.array([p.energy / p.latency for p in P])     # J/sec
+        d_p = np.array([self.switch_cost(current, p) for p in P])
+        useful = np.maximum(delta - d_p, 0.0)
+        # min Σ e_rate_p·Δ·x_p   s.t.  Σ rate_p·useful_p·x_p ≥ EP,  Σ x_p ≤ 1
+        c = e_rate * delta
+        a_ub = np.vstack([-(rate * useful), np.ones(len(P))])
+        b_ub = np.array([-ep, 1.0])
+        res = linprog(c, A_ub=a_ub, b_ub=b_ub, bounds=[(0.0, 1.0)] * len(P),
+                      method="highs")
+        if not res.success:
+            # infeasible horizon: run the fastest plan flat out; the next
+            # horizon's EP_Δ recomputation absorbs the deficit (§4.3)
+            fastest = int(np.argmax(rate * np.maximum(delta - d_p, 0.0)))
+            return [(P[fastest], 1.0)]
+        out = [(P[i], float(x)) for i, x in enumerate(res.x) if x > 1e-6]
+        return out or [(P[int(np.argmax(rate))], 1.0)]
+
+    # -- interruptible-workload simulation (Fig. 12) --------------------------------
+    def run_interruptible(self, total_iters: float, deadline: float,
+                          dynamics: Sequence[DynamicsEvent] = (),
+                          horizon: Optional[float] = None) -> Dict[str, object]:
+        """Simulate horizon-by-horizon plan mixing until the job finishes.
+
+        Returns trace with total energy, completion time, QoE verdict.
+        """
+        cfg = self.config
+        delta = horizon or cfg.horizon_s
+        t, done, energy = 0.0, 0.0, 0.0
+        current: Optional[ParallelismPlan] = None
+        events = sorted(dynamics, key=lambda e: e.t)
+        trace: List[Dict[str, float]] = []
+        speed: Dict[str, float] = {}
+        bw: Dict[str, float] = {}
+        while done < total_iters and t < 10 * deadline:
+            while events and events[0].t <= t:
+                ev = events.pop(0)
+                speed.update(ev.compute_speed)
+                bw.update(ev.bandwidth_scale)
+                self._refresh_plans(speed, bw)
+            mixture = self.mix_for_horizon(total_iters - done, deadline - t,
+                                           current, delta)
+            spent = 0.0
+            for plan, frac in mixture:
+                span = frac * delta
+                if span <= 0:
+                    continue
+                stall = self.switch_cost(current, plan)
+                exec_span = max(span - stall, 0.0)
+                iters = min(exec_span / plan.latency, total_iters - done)
+                done += iters
+                energy += (plan.energy / plan.latency) * (iters * plan.latency)
+                spent += stall + iters * plan.latency
+                current = plan
+                trace.append(dict(t=t, plan=id(plan), frac=frac, iters=iters,
+                                  lat=plan.latency))
+                if done >= total_iters:
+                    break
+            # advance by the true elapsed time once the job finishes
+            t += delta if done < total_iters else min(spent, delta)
+        return dict(energy=energy, finished_at=t, done=done,
+                    met_deadline=(done >= total_iters
+                                  and t <= deadline * (1.0 + 1e-3)),
+                    trace=trace)
+
+    # -- continuous-workload path (Fig. 16) ------------------------------------------
+    def on_dynamics(self, current: ParallelismPlan, event: DynamicsEvent,
+                    replan_fn: Optional[Callable[[], Sequence[ParallelismPlan]]] = None
+                    ) -> Tuple[ParallelismPlan, str, float]:
+        """React to one runtime event. Returns (plan, action, react_seconds)."""
+        t0 = time.perf_counter()
+        speed = dict(event.compute_speed)
+        bwsc = dict(event.bandwidth_scale)
+        if event.magnitude() <= self.config.fluctuation_threshold or replan_fn is None:
+            refined = self.scheduler.refine(current, compute_speed=speed,
+                                            bandwidth_scale=bwsc)
+            return refined, "reschedule", time.perf_counter() - t0
+        # substantial shift: full replan + async/delta switch
+        fresh = list(replan_fn())
+        refined = [self.scheduler.refine(p, compute_speed=speed,
+                                         bandwidth_scale=bwsc) for p in fresh]
+        refined.sort(key=lambda p: p.objective)
+        new = refined[0]
+        stall = self.switch_cost(current, new)
+        new.meta["switch_stall_s"] = stall
+        self.plans = pareto_filter(refined)
+        return new, "replan", time.perf_counter() - t0
+
+    # -- helpers -----------------------------------------------------------------------
+    def _refresh_plans(self, speed: Dict[str, float], bw: Dict[str, float]) -> None:
+        """Re-evaluate the Pareto set under current conditions (fast: the
+        Phase-2 scheduler only; no repartitioning)."""
+        refreshed = [self.scheduler.refine(p, compute_speed=dict(speed),
+                                           bandwidth_scale=dict(bw))
+                     for p in self.all_plans]
+        self.plans = pareto_filter(refreshed)

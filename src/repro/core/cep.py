@@ -1,0 +1,97 @@
+"""Communication-Expanded Planning (CEP) graph construction (§4.2).
+
+Expands a ``ParallelismPlan`` into per-(stage, microbatch) compute and
+communication tasks with full dependency edges, annotated with durations
+(compute) and byte counts + traversed network resources (comm). The
+Phase-2 scheduler and the edge simulator both execute this graph.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from .device import Topology
+from .engine import Task
+from .plans import ParallelismPlan
+
+
+def _route(topo: Topology, src_devs, dst_devs) -> Tuple[str, ...]:
+    """Network resources an inter-stage transfer traverses (representative
+    bottleneck pair: every sample crosses the same shared medium in WiFi
+    settings; for rings we take the first-device route)."""
+    pairs = [(i, j) for i in src_devs for j in dst_devs if i != j]
+    if not pairs:
+        return ()
+    i, j = pairs[0]
+    return tuple(r.name for r in topo.resources_between(i, j))
+
+
+def _group_route(topo: Topology, devs) -> Tuple[str, ...]:
+    """Resources a data-parallel gradient all-reduce occupies."""
+    names: List[str] = []
+    for a, b in zip(devs[:-1], devs[1:]):
+        for r in topo.resources_between(a, b):
+            if r.name not in names:
+                names.append(r.name)
+    if len(devs) > 1:
+        for r in topo.resources_between(devs[-1], devs[0]):
+            if r.name not in names:
+                names.append(r.name)
+    return tuple(names)
+
+
+def build_cep(plan: ParallelismPlan, topo: Topology) -> List[Task]:
+    """CEP tasks for one training iteration (or one inference forward)."""
+    S = len(plan.stages)
+    M = plan.n_microbatches
+    training = plan.training
+    tasks: List[Task] = []
+
+    def _lat(route: Tuple[str, ...]) -> float:
+        return sum(topo.resources[r].latency for r in route)
+
+    for s, st in enumerate(plan.stages):
+        exec_name = f"exec{s}"
+        down_route = _route(topo, st.devices, plan.stages[s + 1].devices) \
+            if s + 1 < S else ()
+        up_route = _route(topo, st.devices, plan.stages[s - 1].devices) \
+            if s > 0 else ()
+        for m in range(M):
+            fdeps: List[str] = []
+            if s > 0:
+                fdeps.append(f"A{s - 1}.{m}")           # upstream activations
+            tasks.append(Task(name=f"F{s}.{m}", kind="compute",
+                              duration=st.fwd_time, executor=exec_name,
+                              deps=tuple(fdeps)))
+            if s + 1 < S:
+                tasks.append(Task(name=f"A{s}.{m}", kind="comm",
+                                  nbytes=st.comm_bytes_out,
+                                  resources=down_route,
+                                  net_latency=_lat(down_route),
+                                  deps=(f"F{s}.{m}",)))
+            if training:
+                bdeps = [f"F{s}.{m}"]
+                if s + 1 < S:
+                    bdeps.append(f"G{s + 1}.{m}")       # downstream grads
+                tasks.append(Task(name=f"B{s}.{m}", kind="compute",
+                                  duration=st.bwd_time, executor=exec_name,
+                                  deps=tuple(bdeps)))
+                if s > 0:
+                    # grad wrt inputs has the size of the *upstream boundary*
+                    # activation (stage s-1's output), not this stage's output
+                    tasks.append(Task(name=f"G{s}.{m}", kind="comm",
+                                      nbytes=plan.stages[s - 1].comm_bytes_out,
+                                      resources=up_route,
+                                      net_latency=_lat(up_route),
+                                      deps=(f"B{s}.{m}",)))
+        if training and st.dp_degree > 1 and st.sync_bytes > 0:
+            ar_route = _group_route(topo, st.devices)
+            tasks.append(Task(name=f"AR{s}", kind="comm",
+                              nbytes=st.sync_bytes * st.dp_degree,
+                              resources=ar_route,
+                              net_latency=_lat(ar_route),
+                              deps=tuple(f"B{s}.{m}" for m in range(M))))
+    return tasks
+
+
+def cep_resource_caps(topo: Topology) -> Dict[str, float]:
+    return {name: r.capacity for name, r in topo.resources.items()}

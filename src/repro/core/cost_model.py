@@ -1,0 +1,211 @@
+"""Analytic cost model for Phase-1 planning (§4.1).
+
+All times use the *contention-free peak p2p* network relaxation; Phase 2
+re-evaluates the survivors under real contention. Costs are analytic
+roofline estimates (compute-bound FLOP time ⊕ memory-bound byte time);
+``DeviceProfile.compute_efficiency`` calibrates to measured MFU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+from .device import Topology
+from .planning_graph import ModelGraph
+from .plans import ParallelismPlan, Stage
+from . import profiler
+from .qoe import QoESpec
+
+
+DVFS_FLOOR = 0.15   # energy/FLOP at min frequency relative to peak (Fig. 3a)
+
+
+def plan_device_energy(stages: Sequence[Stage], topo: Topology, n_micro: int,
+                       training: bool, latency: float) -> Dict[int, float]:
+    """Per-device energy for one iteration: compute + network tx + idle.
+
+    Compute energy is DVFS-aware (the paper's Fig. 3a lever): a device
+    that only needs fraction ``r`` of its peak rate to keep up with the
+    plan runs at a lower voltage/frequency point, costing
+    ``e_flop · (floor + (1-floor)·r²)`` per FLOP — slowing execution
+    within QoE slack is what unlocks the order-of-magnitude savings the
+    paper measures.
+
+    The last stage's boundary activation is never transmitted; gradient
+    return traffic is sized by the *upstream* boundary activation.
+    """
+    per_e: Dict[int, float] = {}
+    S = len(stages)
+    for idx, s in enumerate(stages):
+        for d in s.devices:
+            dev = topo.devices[d]
+            share = s.microbatch_split[d]
+            fl = (s.flops_fwd + s.flops_bwd) * n_micro * share / max(s.tp_degree, 1)
+            busy = fl / dev.effective_flops(s.tp_degree)
+            r = min(busy / max(latency, 1e-12), 1.0)
+            dvfs = DVFS_FLOOR + (1.0 - DVFS_FLOOR) * r * r
+            tx = s.sync_bytes
+            if idx + 1 < S:
+                tx += s.comm_bytes_out * n_micro * share          # activations down
+            if training and idx > 0:
+                tx += stages[idx - 1].comm_bytes_out * n_micro * share  # grads up
+            e = dev.compute_energy(fl) * dvfs + dev.e_byte * tx \
+                + dev.p_idle * latency
+            per_e[d] = per_e.get(d, 0.0) + e
+    return per_e
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One planning workload."""
+
+    global_batch: int
+    microbatch_size: int
+    training: bool = True
+    # training memory multiplier over bf16 params: grads + fp32 Adam m/v
+    # (2 + 2 + 4 + 4 + 4)/2 = 8 over raw bf16 param bytes.
+    optimizer_mult: float = 8.0
+    # gradient-sync byte multiplier (0.25 = int8+EF compression on the
+    # slow axis — see optim/compress.py)
+    grad_compression: float = 1.0
+
+    @property
+    def n_microbatches(self) -> int:
+        return max(1, self.global_batch // self.microbatch_size)
+
+
+class CostModel:
+    def __init__(self, graph: ModelGraph, topo: Topology, workload: Workload):
+        self.graph = graph
+        self.topo = topo
+        self.wl = workload
+
+    # -- stage construction ----------------------------------------------------
+    def make_stage(self, node_ids: Sequence[int], devices: Sequence[int],
+                   next_devices: Optional[Sequence[int]] = None) -> Stage:
+        b = self.wl.microbatch_size
+        nodes = [self.graph.nodes[i] for i in node_ids]
+        flops_f = sum(n.flops_fwd for n in nodes) * b
+        flops_b = sum(n.flops_bwd for n in nodes) * b if self.wl.training else 0.0
+        params = sum(n.param_bytes for n in nodes)
+        boundary_act = nodes[-1].act_bytes * b
+
+        devs = list(devices)
+        tp = 1
+        if len(devs) == 1:
+            tp = self.topo.devices[devs[0]].n_accel
+        speeds = {d: self.topo.devices[d].effective_flops(tp) for d in devs}
+        total_speed = sum(speeds.values())
+        split = {d: speeds[d] / total_speed for d in devs}
+
+        # balanced execution time: every replica finishes together when
+        # microbatches are split ∝ speed (§4.1 load-balance rule).
+        # Per-device roofline: FLOP time ⊕ weight-streaming time (every DP
+        # replica reads the full stage weights once per microbatch — the
+        # dominant term for small-batch serving).
+        w_read = params / max(tp, 1)
+        t_f = max(flops_f / total_speed,
+                  max(w_read / self.topo.devices[d].mem_bw for d in devs))
+        t_b = max(flops_b / total_speed,
+                  max(2.0 * w_read / self.topo.devices[d].mem_bw for d in devs)) \
+            if self.wl.training else 0.0
+
+        # activation send to the next stage at peak p2p bandwidth
+        send_t = 0.0
+        if next_devices:
+            pairs = [(i, j) for i in devs for j in next_devices if i != j]
+            if pairs:
+                bw = min(self.topo.peak_bandwidth(i, j) for i, j in pairs)
+                lat = max(self.topo.route_latency(i, j) for i, j in pairs)
+                send_t = lat + boundary_act / bw
+
+        sync_bytes = 0.0
+        if self.wl.training and len(devs) > 1:
+            g = len(devs)
+            sync_bytes = 2.0 * params * (g - 1) / g \
+                * self.wl.grad_compression              # ring all-reduce per device
+
+        return Stage(node_ids=list(node_ids), devices=devs, microbatch_split=split,
+                     tp_degree=tp, fwd_time=t_f + send_t, bwd_time=t_b + send_t,
+                     comm_bytes_out=boundary_act, sync_bytes=sync_bytes,
+                     param_bytes=params, flops_fwd=flops_f, flops_bwd=flops_b)
+
+    # -- memory ------------------------------------------------------------------
+    def stage_memory(self, stage: Stage, n_stages_hint: int = 1,
+                     schedule: str = "1f1b") -> Dict[int, float]:
+        """Per-device bytes for a stage: params (+optimizer) + in-flight
+        activations. 1F1B holds ≤ n_stages microbatches of activations."""
+        mult = self.wl.optimizer_mult if self.wl.training else 1.0
+        params_per_dev = stage.param_bytes * mult / max(stage.tp_degree, 1)
+        in_flight = min(self.wl.n_microbatches, n_stages_hint) if schedule == "1f1b" \
+            else self.wl.n_microbatches
+        act = stage.comm_bytes_out * in_flight
+        state = sum(self.graph.nodes[i].state_bytes for i in stage.node_ids) \
+            * self.wl.microbatch_size
+        out = {}
+        for d in stage.devices:
+            out[d] = params_per_dev + act * stage.microbatch_split[d] + state
+        return out
+
+    def memory_feasible(self, stage: Stage, qoe: QoESpec, n_stages_hint: int = 4) -> bool:
+        mem = self.stage_memory(stage, n_stages_hint)
+        for d, used in mem.items():
+            cap = self.topo.devices[d].memory
+            if qoe.m_qoe is not None:
+                cap = min(cap, qoe.m_qoe)
+            if used > cap:
+                return False
+        return True
+
+    # -- full-plan evaluation (contention-free) -----------------------------------
+    def boundary_comm_times(self, stages: List[Stage]) -> List[float]:
+        """Per-boundary activation/gradient transfer time at peak p2p bw."""
+        out: List[float] = []
+        for a, b_ in zip(stages[:-1], stages[1:]):
+            pairs = [(i, j) for i in a.devices for j in b_.devices if i != j]
+            if not pairs:
+                out.append(0.0)
+                continue
+            bw = min(self.topo.peak_bandwidth(i, j) for i, j in pairs)
+            lat = max(self.topo.route_latency(i, j) for i, j in pairs)
+            out.append(lat + a.comm_bytes_out / bw)
+        return out
+
+    def evaluate(self, stages: List[Stage], qoe: QoESpec,
+                 schedule: str = "1f1b") -> ParallelismPlan:
+        M = self.wl.n_microbatches
+        bf = [s.fwd_time for s in stages]
+        bb = [s.bwd_time for s in stages]
+        comm = self.boundary_comm_times(stages)
+        if self.wl.training:
+            if schedule == "gpipe":
+                lat = profiler.gpipe_latency(bf, bb, M, comm, comm)
+            else:
+                lat = profiler.one_f_one_b_latency(bf, bb, M, comm, comm)
+            # gradient sync after the flush (phase-1: non-overlapped bound)
+            sync_t = 0.0
+            for s in stages:
+                if s.sync_bytes > 0.0:
+                    bw = min(self.topo.peak_bandwidth(i, j)
+                             for i in s.devices for j in s.devices if i != j)
+                    sync_t = max(sync_t, s.sync_bytes / bw)
+            lat += sync_t
+        else:
+            # inference: forward wave only
+            lat = profiler.gpipe_latency(bf, [0.0] * len(bf), M, comm, comm)
+
+        per_e = plan_device_energy(stages, self.topo, M, self.wl.training, lat)
+        per_m: Dict[int, float] = {}
+        for s in stages:
+            mem = self.stage_memory(s, len(stages), schedule)
+            for d in s.devices:
+                per_m[d] = max(per_m.get(d, 0.0), mem[d])
+
+        energy = sum(per_e.values())
+        plan = ParallelismPlan(
+            stages=stages, microbatch_size=self.wl.microbatch_size,
+            n_microbatches=M, training=self.wl.training, latency=lat,
+            energy=energy, per_device_energy=per_e, per_device_memory=per_m,
+            objective=qoe.objective(energy, lat))
+        return plan

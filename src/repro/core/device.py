@@ -1,0 +1,219 @@
+"""Device, link and topology models for Dora's planner.
+
+The paper plans over heterogeneous edge devices (phones, laptops, edge
+servers) joined by contention-prone networks (shared WiFi, wired rings).
+``DeviceProfile`` captures compute/memory/energy envelopes; ``Topology``
+captures the communication substrate at two fidelities:
+
+* ``peak_bandwidth(i, j)`` — the *contention-free* point-to-point
+  bandwidth used by Phase 1's relaxed model (§4.1);
+* ``resources_between(i, j)`` — the set of shared resources a transfer
+  occupies, used by Phase 2's contention-aware scheduler (§4.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+MBPS = 1e6 / 8.0  # bytes/sec per Mbps
+GBPS = 1e9 / 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """A single edge device (or TPU slice when planning for pods)."""
+
+    name: str
+    flops: float                  # peak FLOP/s (fp16/bf16)
+    memory: float                 # bytes of accelerator-visible memory
+    mem_bw: float = 50e9          # bytes/sec HBM/LPDDR bandwidth
+    e_flop: float = 5e-12         # joules per FLOP at full tilt
+    e_byte: float = 30e-9         # joules per network byte (radio/NIC)
+    p_idle: float = 2.0           # watts while participating but idle
+    n_accel: int = 1              # accelerators per node (TP stays in-node, §4.1)
+    tp_efficiency: float = 0.85   # scaling efficiency of in-node TP
+    compute_efficiency: float = 0.45  # achievable fraction of peak (MFU-ish)
+
+    def effective_flops(self, tp_degree: int = 1) -> float:
+        tp = min(max(tp_degree, 1), self.n_accel)
+        eff = self.compute_efficiency * (self.tp_efficiency ** max(tp - 1, 0))
+        return self.flops * tp * eff
+
+    def compute_time(self, flops: float, tp_degree: int = 1) -> float:
+        if flops <= 0.0:
+            return 0.0
+        return flops / self.effective_flops(tp_degree)
+
+    def compute_energy(self, flops: float) -> float:
+        return flops * self.e_flop
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkResource:
+    """A schedulable network resource with a capacity (bytes/sec).
+
+    A shared WiFi medium is one resource that *every* flow between its
+    members occupies; a wired p2p link is a resource only its endpoints
+    use. The bandwidth-feasibility constraint of Eq. (6) is enforced per
+    resource.
+    """
+
+    name: str
+    capacity: float               # bytes/sec
+    members: FrozenSet[int]       # device indices attached
+    shared: bool = True           # shared medium vs dedicated pair link
+    latency: float = 0.0          # per-message latency (sec): WiFi MAC/RTT
+
+
+class Topology:
+    """Network topology over an ordered set of devices."""
+
+    def __init__(self, devices: Sequence[DeviceProfile],
+                 resources: Sequence[LinkResource],
+                 p2p: Optional[Dict[Tuple[int, int], List[str]]] = None):
+        self.devices = list(devices)
+        self.resources = {r.name: r for r in resources}
+        # explicit routing table: (i, j) -> list of resource names the
+        # transfer traverses. When absent we fall back to any shared
+        # medium containing both endpoints.
+        self._p2p = dict(p2p or {})
+
+    # -- construction helpers -------------------------------------------------
+    @classmethod
+    def shared_medium(cls, devices: Sequence[DeviceProfile], capacity_mbps: float,
+                      name: str = "wifi", latency: float = 3e-3) -> "Topology":
+        """All devices hang off one shared medium (home WiFi)."""
+        res = LinkResource(name=name, capacity=capacity_mbps * MBPS,
+                           members=frozenset(range(len(devices))), shared=True,
+                           latency=latency)
+        return cls(devices, [res])
+
+    @classmethod
+    def ring(cls, devices: Sequence[DeviceProfile], link_mbps: float,
+             name: str = "ring", latency: float = 0.5e-3) -> "Topology":
+        """Wired ring: dedicated links between neighbours; multi-hop
+        transfers traverse every intermediate link."""
+        n = len(devices)
+        resources = []
+        for i in range(n):
+            j = (i + 1) % n
+            resources.append(LinkResource(
+                name=f"{name}-{i}-{j}", capacity=link_mbps * MBPS,
+                members=frozenset((i, j)), shared=False, latency=latency))
+        p2p: Dict[Tuple[int, int], List[str]] = {}
+        for i in range(n):
+            for j in range(n):
+                if i == j:
+                    continue
+                # take the shorter arc around the ring
+                fwd = [(k % n, (k + 1) % n) for k in range(i, i + (j - i) % n)]
+                bwd_len = n - (j - i) % n
+                bwd = [((k - 1) % n, k % n) for k in range(i, i - bwd_len, -1)]
+                hops = fwd if len(fwd) <= len(bwd) else bwd
+                p2p[(i, j)] = [f"{name}-{min(a, b)}-{max(a, b)}"
+                               if False else _ring_link_name(name, a, b, n)
+                               for a, b in hops]
+        return cls(devices, resources, p2p)
+
+    @classmethod
+    def mixed(cls, devices: Sequence[DeviceProfile],
+              resources: Sequence[LinkResource],
+              p2p: Optional[Dict[Tuple[int, int], List[str]]] = None) -> "Topology":
+        return cls(devices, resources, p2p)
+
+    # -- queries ---------------------------------------------------------------
+    def resources_between(self, i: int, j: int) -> List[LinkResource]:
+        if i == j:
+            return []
+        key = (i, j)
+        if key in self._p2p:
+            return [self.resources[n] for n in self._p2p[key]]
+        out = []
+        for r in self.resources.values():
+            if r.shared and i in r.members and j in r.members:
+                out.append(r)
+        if not out:
+            raise KeyError(f"no route between device {i} and {j}")
+        return [min(out, key=lambda r: -r.capacity)]  # best shared medium
+
+    def peak_bandwidth(self, i: int, j: int) -> float:
+        """Contention-free peak p2p bandwidth (Phase-1 relaxation)."""
+        if i == j:
+            return math.inf
+        return min(r.capacity for r in self.resources_between(i, j))
+
+    def route_latency(self, i: int, j: int) -> float:
+        if i == j:
+            return 0.0
+        return sum(r.latency for r in self.resources_between(i, j))
+
+    def transfer_time(self, i: int, j: int, nbytes: float) -> float:
+        if i == j or nbytes <= 0.0:
+            return 0.0
+        return self.route_latency(i, j) + nbytes / self.peak_bandwidth(i, j)
+
+    @property
+    def n(self) -> int:
+        return len(self.devices)
+
+
+def _ring_link_name(name: str, a: int, b: int, n: int) -> str:
+    """Canonical name of the ring link between neighbours a and b."""
+    lo, hi = (a, b) if (a + 1) % n == b else (b, a)
+    return f"{name}-{lo}-{(lo + 1) % n}"
+
+
+# ----------------------------------------------------------------------------
+# Catalogue: devices from Table 2 and TPU v5e slices for pod planning.
+# FLOP/s values are public fp16/bf16 peaks; energy coefficients are derived
+# from TDP / peak and calibrated against Figure 3a's order-of-magnitude
+# energy-vs-speed spread.
+# ----------------------------------------------------------------------------
+CATALOG: Dict[str, DeviceProfile] = {
+    "s25": DeviceProfile("s25", flops=2.8e12, memory=12e9, mem_bw=77e9,
+                         e_flop=2.4e-12, e_byte=40e-9, p_idle=1.2),
+    "mi15": DeviceProfile("mi15", flops=2.8e12, memory=12e9, mem_bw=77e9,
+                          e_flop=2.4e-12, e_byte=40e-9, p_idle=1.2),
+    "genio520": DeviceProfile("genio520", flops=1.6e12, memory=16e9, mem_bw=51e9,
+                              e_flop=3.0e-12, e_byte=35e-9, p_idle=2.0),
+    "genio720": DeviceProfile("genio720", flops=2.4e12, memory=16e9, mem_bw=68e9,
+                              e_flop=2.6e-12, e_byte=35e-9, p_idle=2.2),
+    "rtx4050": DeviceProfile("rtx4050", flops=15.0e12, memory=6e9, mem_bw=216e9,
+                             e_flop=6.0e-12, e_byte=25e-9, p_idle=14.0),
+    "rtx4060": DeviceProfile("rtx4060", flops=20.0e12, memory=8e9, mem_bw=272e9,
+                             e_flop=5.8e-12, e_byte=25e-9, p_idle=16.0),
+    "rtx4060ti": DeviceProfile("rtx4060ti", flops=22.0e12, memory=8e9, mem_bw=288e9,
+                               e_flop=5.9e-12, e_byte=25e-9, p_idle=17.0),
+    "v100": DeviceProfile("v100", flops=112.0e12, memory=16e9, mem_bw=900e9,
+                          e_flop=2.2e-12, e_byte=15e-9, p_idle=55.0),
+    "a40": DeviceProfile("a40", flops=149.0e12, memory=16e9, mem_bw=696e9,
+                         e_flop=2.0e-12, e_byte=15e-9, p_idle=60.0),
+    # TPU v5e chip as a "device" for pod-level planning (hardware target).
+    "v5e": DeviceProfile("v5e", flops=197e12, memory=16e9, mem_bw=819e9,
+                         e_flop=1.0e-12, e_byte=5e-9, p_idle=60.0,
+                         compute_efficiency=0.55),
+}
+
+
+def make_setting(name: str) -> Topology:
+    """The four representative edge settings of Table 3."""
+    c = CATALOG
+    if name == "smart_home_1":
+        devs = [c["rtx4060ti"], c["rtx4060ti"], c["rtx4050"], c["rtx4050"], c["rtx4050"]]
+        return Topology.shared_medium(devs, 900.0)
+    if name == "smart_home_2":
+        devs = [c["rtx4050"], c["rtx4050"], c["mi15"], c["mi15"], c["s25"]]
+        return Topology.shared_medium(devs, 600.0)
+    if name == "traffic_monitor":
+        devs = [c["genio720"], c["genio720"], c["genio520"], c["genio520"]]
+        wifi = LinkResource("wifi", 600.0 * MBPS, frozenset(range(4)), shared=True,
+                            latency=3e-3)
+        ring = Topology.ring(devs, 200.0)
+        resources = list(ring.resources.values()) + [wifi]
+        # route over the wired ring for neighbours, wifi otherwise
+        return Topology.mixed(devs, resources, ring._p2p)
+    if name == "edge_cluster":
+        devs = [c["a40"], c["a40"], c["v100"], c["v100"]]
+        return Topology.ring(devs, 4000.0, name="lan", latency=0.2e-3)
+    raise KeyError(f"unknown setting {name}")

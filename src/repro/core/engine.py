@@ -1,0 +1,265 @@
+"""Discrete-event execution engine for plans.
+
+Models heterogeneous compute (exclusive per-device executors) and
+contention-prone networks at two fidelities:
+
+* ``comm_mode="fair"`` — transfers start as soon as ready and *fluid-share*
+  each network resource (max-min style equal split). This is what a real
+  shared WiFi medium does to contention-oblivious planners (Fig. 2).
+* ``comm_mode="scheduled"`` — Dora's Phase-2 behavior: transfers are
+  chunked and each chunk occupies its resources exclusively, so the
+  scheduler's priority order decides *when* bytes flow (spatial→temporal
+  sharing, §4.2).
+
+The same engine powers the network scheduler's evaluation, the edge
+simulator behind every paper figure, and the runtime adapter's what-if
+queries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class Task:
+    name: str
+    kind: str                       # "compute" | "comm"
+    duration: float = 0.0           # compute seconds (at nominal speed)
+    nbytes: float = 0.0             # comm payload bytes
+    executor: Optional[str] = None  # compute resource token (exclusive)
+    resources: Tuple[str, ...] = () # network resources traversed
+    deps: Tuple[str, ...] = ()
+    priority: float = 0.0           # larger = schedule earlier
+    net_latency: float = 0.0        # fixed per-message latency (WiFi MAC/RTT)
+
+    def clone(self, **kw) -> "Task":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    makespan: float
+    start: Dict[str, float]
+    finish: Dict[str, float]
+    resource_busy: Dict[str, float]         # busy seconds per resource
+    device_busy: Dict[str, float]           # busy seconds per executor
+
+    def utilization(self, name: str) -> float:
+        if self.makespan <= 0:
+            return 0.0
+        return self.resource_busy.get(name, self.device_busy.get(name, 0.0)) / self.makespan
+
+
+class EventEngine:
+    def __init__(self, tasks: Sequence[Task], resource_caps: Dict[str, float],
+                 comm_mode: str = "scheduled",
+                 compute_speed: Optional[Dict[str, float]] = None):
+        """``resource_caps`` — bytes/sec per network resource.
+        ``compute_speed`` — multiplicative speed factor per executor
+        (runtime dynamics: 0.5 = device at half speed)."""
+        self.tasks = {t.name: t for t in tasks}
+        self.caps = dict(resource_caps)
+        self.mode = comm_mode
+        self.speed = dict(compute_speed or {})
+        self._succ: Dict[str, List[str]] = {n: [] for n in self.tasks}
+        self._ndeps: Dict[str, int] = {}
+        for t in self.tasks.values():
+            missing = [d for d in t.deps if d not in self.tasks]
+            if missing:
+                raise ValueError(f"task {t.name} depends on unknown {missing}")
+            self._ndeps[t.name] = len(t.deps)
+            for d in t.deps:
+                self._succ[d].append(t.name)
+
+    # -- critical-path priorities -------------------------------------------------
+    def assign_priorities(self) -> None:
+        order = self._topo_order()
+        dist: Dict[str, float] = {}
+        for name in reversed(order):
+            t = self.tasks[name]
+            base = t.duration if t.kind == "compute" else self._full_bw_time(t)
+            succ_max = max((dist[s] for s in self._succ[name]), default=0.0)
+            dist[name] = base + succ_max
+        for name, d in dist.items():
+            self.tasks[name].priority = d
+
+    def _full_bw_time(self, t: Task) -> float:
+        if not t.resources or t.nbytes <= 0:
+            return 0.0
+        cap = min(self.caps[r] for r in t.resources)
+        return t.net_latency + t.nbytes / cap
+
+    def _topo_order(self) -> List[str]:
+        indeg = dict(self._ndeps)
+        ready = [n for n, d in indeg.items() if d == 0]
+        out: List[str] = []
+        while ready:
+            n = ready.pop()
+            out.append(n)
+            for s in self._succ[n]:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    ready.append(s)
+        if len(out) != len(self.tasks):
+            raise ValueError("task graph has a cycle")
+        return out
+
+    # -- simulation -----------------------------------------------------------------
+    def run(self) -> ScheduleResult:
+        EPS = 1e-12
+        ndeps = dict(self._ndeps)
+        ready: List[Tuple[float, str]] = []     # (-priority, name)
+        for n, d in ndeps.items():
+            if d == 0:
+                heapq.heappush(ready, (-self.tasks[n].priority, n))
+
+        t_now = 0.0
+        start: Dict[str, float] = {}
+        finish: Dict[str, float] = {}
+        res_busy: Dict[str, float] = {r: 0.0 for r in self.caps}
+        dev_busy: Dict[str, float] = {}
+
+        running_compute: List[Tuple[float, str]] = []     # heap (end, name)
+        busy_exec: Dict[str, str] = {}                    # executor -> task
+        busy_net: Dict[str, str] = {}                     # resource -> task (scheduled mode)
+        active_comm: Dict[str, float] = {}                # task -> remaining bytes
+        ready_at: Dict[str, float] = {}                   # comm -> end of latency phase
+
+        def comm_rates() -> Dict[str, float]:
+            share: Dict[str, int] = {}
+            for name in active_comm:
+                for r in self.tasks[name].resources:
+                    share[r] = share.get(r, 0) + 1
+            rates = {}
+            for name in active_comm:
+                t = self.tasks[name]
+                rates[name] = min(self.caps[r] / share[r] for r in t.resources) \
+                    if t.resources else math.inf
+            return rates
+
+        def try_start(name: str) -> bool:
+            t = self.tasks[name]
+            if t.kind == "compute":
+                if t.executor is not None and t.executor in busy_exec:
+                    return False
+                dur = t.duration / self.speed.get(t.executor, 1.0)
+                start[name] = t_now
+                heapq.heappush(running_compute, (t_now + dur, name))
+                if t.executor is not None:
+                    busy_exec[t.executor] = name
+                    dev_busy[t.executor] = dev_busy.get(t.executor, 0.0) + dur
+                return True
+            # comm
+            if t.nbytes <= EPS or not t.resources:
+                start[name] = t_now
+                heapq.heappush(running_compute, (t_now, name))  # instantaneous
+                return True
+            if self.mode == "scheduled":
+                if any(r in busy_net for r in t.resources):
+                    return False
+                for r in t.resources:
+                    busy_net[r] = name
+            start[name] = t_now
+            active_comm[name] = t.nbytes
+            ready_at[name] = t_now + t.net_latency   # bytes flow after the latency
+            return True
+
+        def complete(name: str) -> None:
+            finish[name] = t_now
+            t = self.tasks[name]
+            if t.kind == "compute" and t.executor is not None:
+                if busy_exec.get(t.executor) == name:
+                    del busy_exec[t.executor]
+            if t.kind == "comm":
+                for r in t.resources:
+                    if busy_net.get(r) == name:
+                        del busy_net[r]
+            for s in self._succ[name]:
+                ndeps[s] -= 1
+                if ndeps[s] == 0:
+                    heapq.heappush(ready, (-self.tasks[s].priority, s))
+
+        n_done = 0
+        n_total = len(self.tasks)
+        while n_done < n_total:
+            # start everything we can, highest priority first
+            requeue: List[Tuple[float, str]] = []
+            progressed = True
+            while progressed:
+                progressed = False
+                while ready:
+                    pr, name = heapq.heappop(ready)
+                    if try_start(name):
+                        progressed = True
+                    else:
+                        requeue.append((pr, name))
+                for item in requeue:
+                    heapq.heappush(ready, item)
+                requeue = []
+                if progressed:
+                    continue
+            # advance time to next completion
+            rates = comm_rates()
+            next_t = math.inf
+            if running_compute:
+                next_t = running_compute[0][0]
+            for name, rem in active_comm.items():
+                r = rates[name]
+                if r > 0:
+                    eff_start = max(ready_at.get(name, 0.0), t_now)
+                    next_t = min(next_t, eff_start + rem / r)
+            if next_t is math.inf:
+                stuck = [n for n, d in ndeps.items() if d > 0 or n not in finish]
+                raise RuntimeError(f"engine stalled at t={t_now}; pending={stuck[:5]}")
+            # drain comm bytes (only past each task's latency phase)
+            for name in list(active_comm):
+                r = rates[name]
+                flow_from = max(ready_at.get(name, 0.0), t_now)
+                active_comm[name] -= r * max(next_t - flow_from, 0.0)
+                for res in self.tasks[name].resources:
+                    res_busy[res] += max(next_t - t_now, 0.0)
+            t_now = next_t
+            # completions
+            while running_compute and running_compute[0][0] <= t_now + EPS:
+                _, name = heapq.heappop(running_compute)
+                complete(name)
+                n_done += 1
+            for name in list(active_comm):
+                if active_comm[name] <= 1e-6:
+                    del active_comm[name]
+                    complete(name)
+                    n_done += 1
+
+        return ScheduleResult(makespan=t_now, start=start, finish=finish,
+                              resource_busy=res_busy, device_busy=dev_busy)
+
+
+def chunk_comm_tasks(tasks: Sequence[Task], w: int) -> List[Task]:
+    """Split every comm task into ``w`` chained chunks (§4.2 chunking).
+
+    Chunk 0 inherits the original deps; successors of the original task
+    are re-pointed at the final chunk.
+    """
+    if w <= 1:
+        return list(tasks)
+    rename: Dict[str, str] = {}
+    out: List[Task] = []
+    for t in tasks:
+        if t.kind != "comm" or t.nbytes <= 0:
+            out.append(t)
+            continue
+        last = None
+        for i in range(w):
+            name = f"{t.name}#c{i}"
+            deps = t.deps if i == 0 else (last,)
+            out.append(t.clone(name=name, nbytes=t.nbytes / w, deps=tuple(deps)))
+            last = name
+        rename[t.name] = last
+    fixed: List[Task] = []
+    for t in out:
+        deps = tuple(rename.get(d, d) for d in t.deps)
+        fixed.append(t.clone(deps=deps) if deps != t.deps else t)
+    return fixed

@@ -1,0 +1,281 @@
+"""Phase 1 — heterogeneity- and QoE-aware model partitioner (§4.1).
+
+Graph-level dynamic programming over the serial-decomposed planning
+graph, per Eqs. (3)-(5):
+
+  Q1(j,l,s,n) — first j-1 chains + first l layers of chain j in s stages
+                on the first n devices;
+  Q2(j,k,s,n) — chains k..j bundled into one stage, preceding k-1 chains
+                in s-1 stages, all on the first n devices;
+  Q(j,s,n)    — min(Q1(j,L_j,s,n), min_k Q2(j,k,s,n)).
+
+Every DP cell keeps the **top-K** partial plans (the paper's insight:
+the contention-aware optimum stays near the top of the contention-free
+ranking), evaluated with the Lagrangian objective of Eq. (2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .cost_model import CostModel, Workload
+from .device import Topology
+from .planning_graph import ModelGraph
+from .plans import ParallelismPlan, Stage
+from .qoe import QoESpec
+
+
+@dataclasses.dataclass(frozen=True)
+class _Partial:
+    stages: Tuple[Stage, ...]
+    comm_f: Tuple[float, ...]       # per-boundary activation transfer times
+    energy: float                   # running compute+comm energy estimate
+    sum_t: float                    # Σ (bf+bb) over stages
+    max_t: float                    # max (bf+bb) over stages
+    sync_t: float = 0.0             # max contention-free gradient-sync time
+
+    def key(self, qoe: QoESpec, n_micro: int, mode: str = "e2e") -> float:
+        if mode == "throughput":
+            # cloud-planner objective (L2): steady-state iteration rate —
+            # bottleneck stage + contention-free sync; pipeline fill/drain,
+            # per-message latency and contention are invisible to it.
+            return n_micro * self.max_t + self.sync_t
+        lat_est = (n_micro - 1) * self.max_t + self.sum_t + 2 * sum(self.comm_f)
+        return qoe.objective(self.energy, lat_est)
+
+
+@dataclasses.dataclass
+class PartitionerConfig:
+    top_k: int = 4
+    max_stages: Optional[int] = None
+    delta: float = 0.05                       # Δ-merge threshold
+    schedule: str = "1f1b"
+    device_orderings: Sequence[str] = ("fast_first", "slow_first")
+    microbatch_sizes: Sequence[int] = ()      # empty -> use workload's
+    objective_mode: str = "e2e"               # "e2e" (Dora) | "throughput" (L2 baselines)
+
+
+class ModelPartitioner:
+    def __init__(self, graph: ModelGraph, topo: Topology, qoe: QoESpec,
+                 config: Optional[PartitionerConfig] = None):
+        self.config = config or PartitionerConfig()
+        self.raw_graph = graph
+        self.graph = graph.compress(self.config.delta)
+        self.topo = topo
+        self.qoe = qoe
+        self.chains = self.graph.serial_decompose()
+
+    # -- public ------------------------------------------------------------------
+    def plan(self, workload: Workload,
+             pool: bool = False) -> List[ParallelismPlan]:
+        """Return the top-K QoE-compliant candidate plans (Alg. 1 lines 2-3).
+
+        ``pool=True`` returns the wider DP pool (≤ 8·K plans) for Phase-2
+        re-ranking under real contention — the paper's 'tunable search
+        space' knob (Fig. 13)."""
+        mb_sizes = list(self.config.microbatch_sizes) or [workload.microbatch_size]
+        candidates: List[ParallelismPlan] = []
+        for mb in mb_sizes:
+            if workload.global_batch % mb:
+                continue
+            wl = dataclasses.replace(workload, microbatch_size=mb)
+            candidates.extend(self._plan_one(wl))
+        candidates.sort(key=self._rank_key)
+        candidates = self._dedupe(candidates)
+        if pool:
+            return self._diverse_top(candidates, 8 * self.config.top_k)
+        return self._diverse_top(candidates, self.config.top_k)
+
+    def _rank_key(self, p: ParallelismPlan) -> float:
+        if self.config.objective_mode == "throughput":
+            # rate-optimal ranking: steady-state iteration time =
+            # microbatches × bottleneck stage + contention-free gradient
+            # sync. Blind to pipeline fill/drain, per-message latency and
+            # link contention — the L2 failure mode.
+            bott = max(s.fwd_time + s.bwd_time for s in p.stages)
+            sync = 0.0
+            for s in p.stages:
+                if s.sync_bytes > 0 and s.dp_degree > 1:
+                    bw = min(self.topo.peak_bandwidth(i, j)
+                             for i in s.devices for j in s.devices if i != j)
+                    sync = max(sync, s.sync_bytes / bw)
+            return p.n_microbatches * bott + sync
+        return p.objective
+
+    @staticmethod
+    def _diverse_top(plans: List[ParallelismPlan], k: int) -> List[ParallelismPlan]:
+        """Top-K candidate selection. The contention-free ranking is only a
+        *proxy* (§4.1 — the real-network optimum stays 'near the top'), so
+        half the K slots take the outright best plans (rank inversions
+        happen within a shape class too) and half cover distinct plan
+        shapes (stage count × max DP width × device count × microbatch).
+        Phase 2 re-ranks everything under true contention."""
+        head = plans[: max(k // 2, 1)]
+        chosen = {id(p) for p in head}
+        sigs = {(p.n_stages, max(s.dp_degree for s in p.stages),
+                 len(set(p.devices)), p.microbatch_size) for p in head}
+        out = list(head)
+        for p in plans:                       # fill with unseen shapes
+            if len(out) >= k:
+                break
+            sig = (p.n_stages, max(s.dp_degree for s in p.stages),
+                   len(set(p.devices)), p.microbatch_size)
+            if sig in sigs or id(p) in chosen:
+                continue
+            out.append(p)
+            chosen.add(id(p))
+            sigs.add(sig)
+        for p in plans:                       # densify with runners-up
+            if len(out) >= k:
+                break
+            if id(p) not in chosen:
+                out.append(p)
+                chosen.add(id(p))
+        return out
+
+    # -- DP ----------------------------------------------------------------------
+    def _plan_one(self, wl: Workload) -> List[ParallelismPlan]:
+        cm = CostModel(self.graph, self.topo, wl)
+        out: List[ParallelismPlan] = []
+        for ordering in self.config.device_orderings:
+            devices = self._order_devices(ordering)
+            out.extend(self._dp(cm, wl, devices))
+        return out
+
+    def _order_devices(self, ordering: str) -> List[int]:
+        idx = list(range(self.topo.n))
+        speed = lambda d: self.topo.devices[d].effective_flops()
+        if ordering == "fast_first":
+            idx.sort(key=speed, reverse=True)
+        elif ordering == "slow_first":
+            idx.sort(key=speed)
+        return idx
+
+    def _dp(self, cm: CostModel, wl: Workload, dev_order: List[int]) -> List[ParallelismPlan]:
+        K = self.config.top_k
+        N = len(dev_order)
+        J = len(self.chains)
+        S_max = self.config.max_stages or min(N, len(self.graph.nodes))
+        M = wl.n_microbatches
+        qoe = self.qoe
+        mode = self.config.objective_mode
+        stage_cache: Dict[Tuple, Optional[Stage]] = {}
+
+        def block(n0: int, n1: int) -> List[int]:
+            return [dev_order[i] for i in range(n0, n1)]
+
+        def make_stage(node_ids: Tuple[int, ...], n0: int, n1: int) -> Optional[Stage]:
+            key = (node_ids, n0, n1)
+            if key not in stage_cache:
+                st = cm.make_stage(list(node_ids), block(n0, n1))
+                if not cm.memory_feasible(st, qoe, n_stages_hint=4):
+                    st = None
+                stage_cache[key] = st
+            return stage_cache[key]
+
+        def extend(p: _Partial, st: Stage) -> _Partial:
+            comm_t = 0.0
+            if p.stages:
+                prev = p.stages[-1]
+                pairs = [(i, j) for i in prev.devices for j in st.devices if i != j]
+                if pairs:
+                    bw = min(self.topo.peak_bandwidth(i, j) for i, j in pairs)
+                    comm_t = prev.comm_bytes_out / bw
+            sync_t = p.sync_t
+            if st.sync_bytes > 0 and st.dp_degree > 1:
+                bw = min(self.topo.peak_bandwidth(i, j)
+                         for i in st.devices for j in st.devices if i != j)
+                sync_t = max(sync_t, st.sync_bytes / bw)
+            e = p.energy + self._stage_energy(st, M)
+            t = st.fwd_time + st.bwd_time
+            return _Partial(p.stages + (st,), p.comm_f + ((comm_t,) if p.stages else ()),
+                            e, p.sum_t + t, max(p.max_t, t), sync_t)
+
+        def push(cell: List[_Partial], cand: _Partial) -> None:
+            cell.append(cand)
+            cell.sort(key=lambda q: q.key(qoe, M, mode))
+            del cell[K:]
+
+        empty = _Partial((), (), 0.0, 0.0, 0.0)
+        # Q[(j, s, n)] / Q1[(j, l, s, n)] hold top-K partials
+        Q: Dict[Tuple[int, int, int], List[_Partial]] = {(0, 0, n): [empty] for n in range(N + 1)}
+        Q[(0, 0, 0)] = [empty]
+        final: List[_Partial] = []
+
+        for j in range(1, J + 1):
+            chain = self.chains[j - 1]
+            L = len(chain)
+            Q1: Dict[Tuple[int, int, int], List[_Partial]] = {}
+            for s in range(0, S_max + 1):
+                for n in range(0, N + 1):
+                    # base: Q1(j, 0, s, n) = Q(j-1, s, n)
+                    prev = Q.get((j - 1, s, n))
+                    if prev:
+                        Q1[(0, s, n)] = list(prev)
+            for s in range(1, S_max + 1):
+                for n in range(1, N + 1):
+                    for l in range(1, L + 1):
+                        cell: List[_Partial] = []
+                        # Eq. (3): extend with a stage of layers l'+1..l on devices n'+1..n
+                        for lp in range(0, l):
+                            seg = tuple(chain[lp:l])
+                            for np_ in range(0, n):
+                                st = make_stage(seg, np_, n)
+                                if st is None:
+                                    continue
+                                for p in Q1.get((lp, s - 1, np_), ()):  # noqa: B020
+                                    push(cell, extend(p, st))
+                        if cell:
+                            Q1[(l, s, n)] = cell
+                    # Eq. (4)+(5): Q(j, s, n)
+                    qcell: List[_Partial] = list(Q1.get((L, s, n), ()))
+                    for k in range(1, j + 1):
+                        bundle = tuple(itertools.chain.from_iterable(
+                            self.chains[t] for t in range(k - 1, j)))
+                        for np_ in range(0, n):
+                            st = make_stage(bundle, np_, n)
+                            if st is None:
+                                continue
+                            for p in Q.get((k - 1, s - 1, np_), ()):  # noqa: B020
+                                push(qcell, extend(p, st))
+                    if qcell:
+                        qcell.sort(key=lambda q: q.key(qoe, M, mode))
+                        Q[(j, s, n)] = qcell[:K]
+            # allow chain j to end at any s/n — final candidates come from j == J
+        for s in range(1, S_max + 1):
+            for n in range(1, N + 1):
+                final.extend(Q.get((J, s, n), ()))
+
+        plans: List[ParallelismPlan] = []
+        for p in final:
+            if not p.stages:
+                continue
+            plan = cm.evaluate(list(p.stages), qoe, self.config.schedule)
+            plan.meta["dev_order"] = tuple(dev_order)
+            plans.append(plan)
+        plans.sort(key=self._rank_key)
+        return plans[: 4 * K]
+
+    def _stage_energy(self, st: Stage, n_micro: int) -> float:
+        e = 0.0
+        for d in st.devices:
+            dev = self.topo.devices[d]
+            share = st.microbatch_split[d]
+            fl = (st.flops_fwd + st.flops_bwd) * n_micro * share / max(st.tp_degree, 1)
+            e += dev.compute_energy(fl)
+            e += dev.e_byte * (st.comm_bytes_out * n_micro * share + st.sync_bytes)
+        return e
+
+    @staticmethod
+    def _dedupe(plans: List[ParallelismPlan]) -> List[ParallelismPlan]:
+        seen = set()
+        out = []
+        for p in plans:
+            sig = tuple((tuple(s.node_ids), tuple(s.devices)) for s in p.stages) \
+                + (p.microbatch_size,)
+            if sig in seen:
+                continue
+            seen.add(sig)
+            out.append(p)
+        return out

@@ -1,0 +1,60 @@
+"""Algorithm 1 — QoE-aware hybrid parallelism planner (end-to-end)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+from .adapter import AdapterConfig, RuntimeAdapter, pareto_filter
+from .cost_model import Workload
+from .device import Topology
+from .partitioner import ModelPartitioner, PartitionerConfig
+from .planning_graph import ModelGraph
+from .plans import ParallelismPlan
+from .qoe import QoESpec
+from .scheduler import NetworkScheduler, SchedulerConfig
+
+
+@dataclasses.dataclass
+class PlanningResult:
+    best: ParallelismPlan
+    candidates: List[ParallelismPlan]       # Phase-2 refined, ranked
+    pareto: List[ParallelismPlan]           # for the runtime adapter
+    phase1_s: float
+    phase2_s: float
+
+    @property
+    def total_s(self) -> float:
+        return self.phase1_s + self.phase2_s
+
+
+class DoraPlanner:
+    """ParallelismPlanner(G_M, D) per Algorithm 1."""
+
+    def __init__(self, graph: ModelGraph, topo: Topology, qoe: QoESpec,
+                 partitioner_config: Optional[PartitionerConfig] = None,
+                 scheduler_config: Optional[SchedulerConfig] = None,
+                 adapter_config: Optional[AdapterConfig] = None):
+        self.graph = graph
+        self.topo = topo
+        self.qoe = qoe
+        self.partitioner = ModelPartitioner(graph, topo, qoe, partitioner_config)
+        self.scheduler = NetworkScheduler(topo, qoe, scheduler_config)
+        self.adapter_config = adapter_config
+
+    def plan(self, workload: Workload) -> PlanningResult:
+        t0 = time.perf_counter()
+        pool = self.partitioner.plan(workload, pool=True)  # lines 2-3 (top-K pool)
+        t1 = time.perf_counter()
+        refined = self.scheduler.refine_candidates(        # line 4
+            pool, keep=self.partitioner.config.top_k)
+        t2 = time.perf_counter()
+        if not refined:
+            raise RuntimeError("no QoE-feasible plan found")
+        return PlanningResult(best=refined[0], candidates=refined,
+                              pareto=pareto_filter(refined),
+                              phase1_s=t1 - t0, phase2_s=t2 - t1)
+
+    def make_adapter(self, result: PlanningResult) -> RuntimeAdapter:
+        return RuntimeAdapter(result.candidates, self.topo, self.qoe,
+                              self.scheduler, self.adapter_config)

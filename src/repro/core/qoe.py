@@ -1,0 +1,49 @@
+"""QoE specifications and Dora's Lagrangian-relaxed objective (Eqs. 1-2)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class QoESpec:
+    """User-facing QoE constraints for one workload.
+
+    ``t_qoe``     — end-to-end latency target (sec per training iteration,
+                    or sec per generated token for serving).
+    ``e_qoe``     — per-device energy budget (J per iteration/token);
+                    ``None`` means unconstrained.
+    ``m_qoe``     — optional per-device memory cap override (bytes);
+                    device memory from the profile is always enforced.
+    ``lam``       — λ in Eq. (2): price of one second of QoE violation in
+                    joules.
+    ``deadline``  — optional long-horizon deadline (sec) for the runtime
+                    adapter's uniform-progress heuristic (§4.3).
+    """
+
+    t_qoe: float = math.inf
+    e_qoe: Optional[float] = None
+    m_qoe: Optional[float] = None
+    lam: float = 1.0
+    deadline: Optional[float] = None
+
+    def objective(self, energy: float, latency: float) -> float:
+        """Eq. (2): total energy + λ · (T_plan − T_QoE)_+ ."""
+        violation = max(0.0, latency - self.t_qoe)
+        return energy + self.lam * violation
+
+    def feasible_memory(self, per_device_bytes: Dict[int, float],
+                        device_memory: Dict[int, float]) -> bool:
+        for i, used in per_device_bytes.items():
+            cap = device_memory[i]
+            if self.m_qoe is not None:
+                cap = min(cap, self.m_qoe)
+            if used > cap:
+                return False
+        return True
+
+    def feasible_energy(self, per_device_energy: Dict[int, float]) -> bool:
+        if self.e_qoe is None:
+            return True
+        return all(e <= self.e_qoe for e in per_device_energy.values())

@@ -1,0 +1,157 @@
+"""Phase 2 — contention-aware network scheduler (§4.2).
+
+For each Phase-1 candidate plan, builds the CEP graph and solves the
+scheduling problem of Eq. (6): minimize makespan subject to dependency
+and per-resource bandwidth-feasibility constraints.
+
+Deployment-faithful solver: critical-path-priority list scheduling over
+*chunked* transfers (each chunk holds its resources exclusively —
+spatial→temporal bandwidth sharing, exactly the mechanism §4.2/§5
+deploy, since edge devices cannot program WiFi APs). An LP/analytic
+lower bound certifies the optimality gap; ``fair`` mode reproduces what
+the same plan suffers when transfers contend without scheduling
+(baseline behavior, Fig. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .cep import build_cep, cep_resource_caps
+from .device import Topology
+from .engine import EventEngine, ScheduleResult, Task, chunk_comm_tasks
+from .plans import ParallelismPlan
+from .qoe import QoESpec
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    chunks: int = 4                  # w sub-transfers per communication task
+    modes: Sequence[int] = (1, 2, 4, 8)   # chunk counts searched (Fig. 13 knob)
+    time_budget_s: float = 1.0       # responsiveness knob (Fig. 13)
+
+
+class NetworkScheduler:
+    def __init__(self, topo: Topology, qoe: QoESpec,
+                 config: Optional[SchedulerConfig] = None):
+        self.topo = topo
+        self.qoe = qoe
+        self.config = config or SchedulerConfig()
+
+    @staticmethod
+    def _exec_speeds(plan: ParallelismPlan,
+                     device_speed: Optional[Dict[int, float]]) -> Dict[str, float]:
+        """Convert device-level speed factors into per-stage executor
+        factors (stage rate = Σ share_d × f_d under proportional split)."""
+        if not device_speed:
+            return {}
+        out: Dict[str, float] = {}
+        for s, st in enumerate(plan.stages):
+            f = sum(st.microbatch_split[d] * device_speed.get(d, 1.0)
+                    for d in st.devices)
+            out[f"exec{s}"] = max(f, 1e-6)
+        return out
+
+    # -- single-plan refinement ---------------------------------------------------
+    def refine(self, plan: ParallelismPlan,
+               compute_speed: Optional[Dict[int, float]] = None,
+               bandwidth_scale: Optional[Dict[str, float]] = None) -> ParallelismPlan:
+        """Re-evaluates ``plan`` under real contention with Dora's chunked
+        temporal scheduling; picks the best chunk count within budget."""
+        tasks = build_cep(plan, self.topo)
+        caps = self._caps(bandwidth_scale)
+        compute_speed = self._exec_speeds(plan, compute_speed)
+        best: Tuple[float, Optional[ScheduleResult], int] = (math.inf, None, 1)
+        t0 = time.perf_counter()
+        # w=0 — the null schedule (fluid sharing, no intervention). Dora's
+        # temporal scheduling must never lose to just sending the bytes.
+        engine = EventEngine(tasks, caps, comm_mode="fair",
+                             compute_speed=compute_speed)
+        engine.assign_priorities()
+        res = engine.run()
+        best = (res.makespan, res, 0)
+        for w in self.config.modes:
+            chunked = chunk_comm_tasks(tasks, w)
+            engine = EventEngine(chunked, caps, comm_mode="scheduled",
+                                 compute_speed=compute_speed)
+            engine.assign_priorities()
+            res = engine.run()
+            if res.makespan < best[0]:
+                best = (res.makespan, res, w)
+            if time.perf_counter() - t0 > self.config.time_budget_s:
+                break
+        lat, sched, w = best
+        refined = dataclasses.replace(plan)
+        refined.latency = lat
+        refined.schedule = sched
+        refined.meta = dict(plan.meta, chunks=w, lp_bound=self.lower_bound(plan, caps))
+        self._reprice(refined)
+        return refined
+
+    def evaluate_fair(self, plan: ParallelismPlan,
+                      compute_speed: Optional[Dict[int, float]] = None,
+                      bandwidth_scale: Optional[Dict[str, float]] = None) -> ParallelismPlan:
+        """Contention WITHOUT scheduling: transfers fluid-share the medium
+        (how contention-oblivious planners actually execute)."""
+        tasks = build_cep(plan, self.topo)
+        engine = EventEngine(tasks, self._caps(bandwidth_scale), comm_mode="fair",
+                             compute_speed=self._exec_speeds(plan, compute_speed))
+        engine.assign_priorities()
+        res = engine.run()
+        out = dataclasses.replace(plan)
+        out.latency = res.makespan
+        out.schedule = res
+        self._reprice(out)
+        return out
+
+    # -- Alg. 1 line 4: refine candidates, return ranked --------------------------
+    def refine_candidates(self, plans: Sequence[ParallelismPlan],
+                          keep: Optional[int] = None) -> List[ParallelismPlan]:
+        """Two-pass refinement: (1) re-rank the whole candidate pool with
+        one cheap contention-aware evaluation each — the fix for Phase-1
+        rank inversions under contention; (2) run the full chunk-count
+        search on the ``keep`` best (Fig. 13's accuracy/responsiveness
+        knob). Returns every plan, accurately priced, best first."""
+        keep = keep if keep is not None else max(len(plans) // 4, 4)
+        fair = [self.evaluate_fair(p) for p in plans]
+        fair.sort(key=lambda p: p.objective)
+        head = [self.refine(p) for p in fair[:keep]]
+        out = head + fair[keep:]
+        out.sort(key=lambda p: p.objective)
+        return out
+
+    # -- Eq. (6) lower bound ------------------------------------------------------
+    def lower_bound(self, plan: ParallelismPlan, caps: Dict[str, float]) -> float:
+        """max(zero-contention critical path, per-resource volume bound,
+        per-executor work bound) — certifies list-schedule quality."""
+        tasks = build_cep(plan, self.topo)
+        engine = EventEngine(tasks, caps)
+        engine.assign_priorities()          # priority == downstream critical path
+        cp = max((t.priority for t in engine.tasks.values()), default=0.0)
+        vol: Dict[str, float] = {}
+        work: Dict[str, float] = {}
+        for t in engine.tasks.values():
+            if t.kind == "comm":
+                for r in t.resources:
+                    vol[r] = vol.get(r, 0.0) + t.nbytes / caps[r]
+            elif t.executor:
+                work[t.executor] = work.get(t.executor, 0.0) + t.duration
+        return max([cp] + list(vol.values()) + list(work.values()))
+
+    # -- helpers -------------------------------------------------------------------
+    def _caps(self, scale: Optional[Dict[str, float]]) -> Dict[str, float]:
+        caps = cep_resource_caps(self.topo)
+        for k, s in (scale or {}).items():
+            caps[k] = caps[k] * s
+        return caps
+
+    def _reprice(self, plan: ParallelismPlan) -> None:
+        """Recompute energy/objective for the refined latency (idle power
+        integrates over the true makespan)."""
+        from .cost_model import plan_device_energy
+        plan.per_device_energy = plan_device_energy(
+            plan.stages, self.topo, plan.n_microbatches, plan.training, plan.latency)
+        plan.energy = sum(plan.per_device_energy.values())
+        plan.objective = self.qoe.objective(plan.energy, plan.latency)

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the serving/training compute hot-spots.
+
+Dora's contribution is planner-level, but the plans it emits execute
+real model stages; the four hot-spots below dominate that compute on
+the assigned architectures and ship as Pallas kernels with pure-jnp
+oracles (``ref.py``) and backend dispatch (``ops.py``):
+
+* ``flash_attention``  — causal/SWA/GQA flash attention (train/prefill)
+* ``decode_attention`` — split-KV flash decode vs a 32k cache
+* ``ssd_scan``         — Mamba-2 SSD chunked scan (carried state)
+* ``rglru_scan``       — RG-LRU linear recurrence (doubling scan)
+"""
+from .ops import (decode_attention, flash_attention, rglru_scan, ssd_scan,
+                  use_pallas)
+
+__all__ = ["decode_attention", "flash_attention", "rglru_scan", "ssd_scan",
+           "use_pallas"]

@@ -1,0 +1,113 @@
+"""Split-KV flash-decode attention as a Pallas TPU kernel.
+
+One new token attends to a (B, T, KV, d) cache. The KV sequence is
+split into tiles that stream through VMEM (the whole 32k decode cache
+never fits); the running (max, sum, acc) softmax state is carried in
+scratch across tiles — the same log-sum-exp rescaling that lets the
+sharded serve-path combine per-shard partial attention with a psum.
+
+``cache_len`` (B,) arrives via scalar prefetch so the kernel masks
+invalid cache rows (and the ring-buffer window) without host branching.
+
+Grid = (B, H, KV tiles); KV innermost/sequential. GQA maps q-head h to
+cache head h // G in the BlockSpec index maps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, block_k: int, window: Optional[int],
+                   n_kblocks: int):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid = len_ref[b]
+    k_start = ik * block_k
+    run = k_start < valid
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0, 0, :].astype(jnp.float32)          # (d,)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.sum(k * q[None, :], axis=1) * scale        # (bk,)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        ok = kpos < valid
+        if window is not None:
+            ok = jnp.logical_and(ok, kpos > valid - 1 - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_scr[0] = l_scr[0] * alpha + jnp.sum(p)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.sum(
+            p[:, None] * v, axis=0, keepdims=True)
+        m_scr[0] = m_cur
+
+    @pl.when(ik == n_kblocks - 1)
+    def _finish():
+        l = l_scr[0]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0, 0, :] = (acc_scr[0] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "scale", "block_k", "interpret"))
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len: jnp.ndarray, *,
+                     window: Optional[int] = None,
+                     scale: Optional[float] = None, block_k: int = 256,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q: (B, 1, H, d); k/v cache: (B, T, KV, d); cache_len: (B,) int32.
+    Returns (B, 1, H, d)."""
+    B, _, H, d = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale_v = float(scale) if scale is not None else d ** -0.5
+    bk = min(block_k, T)
+    nk = pl.cdiv(T, bk)
+
+    kernel = functools.partial(_decode_kernel, scale=scale_v, block_k=bk,
+                               window=window, n_kblocks=nk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda b, h, ik, lens: (b, 0, h, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b, h, ik, lens: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b, h, ik, lens: (b, ik, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda b, h, ik, lens: (b, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), q, k_cache, v_cache)

@@ -1,0 +1,81 @@
+"""Public kernel entry points with backend dispatch.
+
+On a TPU backend the Pallas kernels compile natively; on CPU they run
+under ``interpret=True`` (the kernel body executes step-by-step — exact
+semantics, no Mosaic) or fall back to the pure-jnp references for bulk
+work. Selection:
+
+* ``REPRO_KERNELS=pallas``    — force Pallas (interpret on CPU)
+* ``REPRO_KERNELS=ref``       — force the jnp references
+* ``REPRO_KERNELS=auto``      — Pallas on TPU, references elsewhere
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention as _decode_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .rglru_scan import rglru_scan as _rglru_pallas
+from .ssd_scan import ssd_scan as _ssd_pallas
+
+
+def _mode() -> str:
+    return os.environ.get("REPRO_KERNELS", "auto")
+
+
+def use_pallas() -> bool:
+    m = _mode()
+    if m == "pallas":
+        return True
+    if m == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None) -> jnp.ndarray:
+    if use_pallas():
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             scale=scale, interpret=_interpret())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   scale=scale)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: Optional[int] = None,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    if use_pallas():
+        return _decode_pallas(q, k_cache, v_cache, cache_len, window=window,
+                              scale=scale, interpret=_interpret())
+    return ref.decode_attention_ref(q, k_cache, v_cache, cache_len,
+                                    window=window, scale=scale)
+
+
+def ssd_scan(x, a_log, b, c, *, chunk: int = 256
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    S = x.shape[1]
+    chunk = min(chunk, S)
+    if use_pallas() and S % chunk == 0:
+        return _ssd_pallas(x, a_log, b, c, chunk=chunk,
+                           interpret=_interpret())
+    return ref.ssd_scan_ref(x, a_log, b, c, chunk=chunk)
+
+
+def rglru_scan(a_log, b, *, block_t: int = 256
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    _, S, W = a_log.shape
+    bt, bw = min(block_t, S), min(512, W)
+    if use_pallas() and S % bt == 0 and W % bw == 0:
+        return _rglru_pallas(a_log, b, block_t=bt, block_w=bw,
+                             interpret=_interpret())
+    return ref.rglru_scan_ref(a_log, b)

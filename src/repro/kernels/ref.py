@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+These re-export the model-zoo reference implementations so kernels and
+models are validated against a single source of truth.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from ..models.attention import decode_attention_ref, gqa_attention
+from ..models.rglru import _rglru_scan
+from ..models.ssm import ssd_chunked as ssd_scan_ref
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    return gqa_attention(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def rglru_scan_ref(a_log: jnp.ndarray, b: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Matches kernels.rglru_scan's (a_log, b) interface: the oracle's
+    gating (b = sqrt(1 - a²)·x) is inverted out by passing xg = b/√(1-a²)."""
+    gate = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * a_log), 1e-12))
+    h, h_last = _rglru_scan(b / gate, a_log, None)
+    return h, h_last
+
+
+__all__ = ["flash_attention_ref", "decode_attention_ref", "ssd_scan_ref",
+           "rglru_scan_ref", "gqa_attention"]

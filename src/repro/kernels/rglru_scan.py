@@ -1,0 +1,93 @@
+"""RG-LRU linear recurrence (RecurrentGemma/Griffin) as a Pallas kernel.
+
+Computes h_t = a_t · h_{t-1} + b_t over the sequence axis.
+
+TPU adaptation: instead of a sequential per-step loop (VPU-hostile), a
+Hillis–Steele *doubling scan* runs the recurrence in ⌈log2 L⌉ rounds of
+full-width vector multiplies on an (L, W) tile:
+
+    (A, h) ← (A · shift(A, k), h + A · shift(h, k)),  k = 1, 2, 4, ...
+
+after which A_t = Π_{s≤t} a_s and h_t is the in-block scan. The carried
+cross-block state enters as ``h_t += A_t · h_block_in``.
+
+* grid = (batch, W tiles, T blocks); T innermost/sequential, the (Wb,)
+  f32 state carried in VMEM scratch.
+* a is passed in log space (a = exp(a_log), a_log ≤ 0) exactly like the
+  model's ``_rglru_scan`` oracle; b is the gated input.
+
+Oracle: ``repro.models.rglru._rglru_scan``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(alog_ref, b_ref, h_ref, hlast_ref, state_scr, *,
+                  block_t: int, n_tblocks: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    a = jnp.exp(alog_ref[0, :, :].astype(jnp.float32))     # (L, Wb)
+    h = b_ref[0, :, :].astype(jnp.float32)                 # (L, Wb)
+    acc = a
+    k = 1
+    while k < block_t:                                     # Hillis–Steele
+        pad_h = jnp.pad(h, ((k, 0), (0, 0)))[:block_t]          # additive id 0
+        pad_a = jnp.pad(acc, ((k, 0), (0, 0)),
+                        constant_values=1.0)[:block_t]          # multiplicative id 1
+        h = h + acc * pad_h
+        acc = acc * pad_a
+        k *= 2
+    # inject the carried state: h_t += (Π_{s≤t} a_s) · h_in
+    h = h + acc * state_scr[...][None, :]
+    state_scr[...] = h[-1]
+    h_ref[0, :, :] = h.astype(h_ref.dtype)
+
+    @pl.when(it == n_tblocks - 1)
+    def _emit():
+        hlast_ref[0, :] = h[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_w", "interpret"))
+def rglru_scan(a_log: jnp.ndarray, b: jnp.ndarray, *, block_t: int = 256,
+               block_w: int = 512,
+               interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """a_log, b: (B, S, W) → (h (B, S, W) f32, h_last (B, W) f32)."""
+    B, S, W = a_log.shape
+    bt = min(block_t, S)
+    bw = min(block_w, W)
+    assert S % bt == 0 and W % bw == 0
+    nt, nw = S // bt, W // bw
+
+    kernel = functools.partial(_rglru_kernel, block_t=bt, n_tblocks=nt)
+    h, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, nw, nt),
+        in_specs=[
+            pl.BlockSpec((1, bt, bw), lambda bi, iw, it: (bi, it, iw)),
+            pl.BlockSpec((1, bt, bw), lambda bi, iw, it: (bi, it, iw)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, bw), lambda bi, iw, it: (bi, it, iw)),
+            pl.BlockSpec((1, bw), lambda bi, iw, it: (bi, iw)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_log, b)
+    return h, h_last

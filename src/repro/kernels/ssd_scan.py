@@ -1,0 +1,110 @@
+"""Mamba-2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060, `ssd_minimal`):
+
+* grid = (batch, heads, chunks); the chunk axis is innermost and
+  sequential — the (P, N) recurrent state lives in VMEM scratch and is
+  carried across chunk steps (h_{c+1} = decay_c · h_c + states_c).
+* per (head, chunk) tile the kernel computes the quadratic *dual form*
+  intra-chunk (an (L, L) masked "attention" matmul — MXU work), plus
+  the rank-1 inter-chunk contribution from the carried state.
+* Per-head tiling keeps VMEM small: x tile (L, P), b/c tiles (L, N),
+  the (L, L) decay matrix, and the f32 (P, N) state — ~0.5 MB at
+  L=256, P=64, N=128.
+* GQA-style B/C groups index as ``h // (H // G)`` in the BlockSpec maps.
+
+Outputs y (B, S, H, P) and the final state (B, H, P, N) — the latter
+seeds the O(1) recurrent decode path.
+
+Oracle: ``repro.models.ssm.ssd_chunked`` (pure jnp).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, hfin_ref, state_scr, *,
+                chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    a = a_ref[0, :, 0].astype(jnp.float32)              # (L,) log-decay ≤ 0
+    x = x_ref[0, :, 0, :].astype(jnp.float32)           # (L, P)
+    b = b_ref[0, :, 0, :].astype(jnp.float32)           # (L, N)
+    c = c_ref[0, :, 0, :].astype(jnp.float32)           # (L, N)
+
+    a_cum = jnp.cumsum(a)                               # (L,)
+    # intra-chunk dual form: masked decay "attention"
+    seg = a_cum[:, None] - a_cum[None, :]               # sum a over (j, i]
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lmat = jnp.where(col <= row, jnp.exp(seg), 0.0)     # (L, L)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (L, L)
+    y_diag = jax.lax.dot_general(lmat * cb, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state + state update
+    state = state_scr[...]                              # (P, N)
+    y_off = jax.lax.dot_general(c, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) \
+        * jnp.exp(a_cum)[:, None]                       # (L, P)
+    decay_states = jnp.exp(a_cum[-1] - a_cum)           # (L,)
+    states_new = jax.lax.dot_general(
+        x * decay_states[:, None], b, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)             # (P, N)
+    state_scr[...] = jnp.exp(a_cum[-1]) * state + states_new
+
+    y_ref[0, :, 0, :] = (y_diag + y_off).astype(y_ref.dtype)
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        hfin_ref[0, 0, :, :] = state_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jnp.ndarray, a_log: jnp.ndarray, b: jnp.ndarray,
+             c: jnp.ndarray, *, chunk: int = 256,
+             interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, H, P) pre-scaled by dt; a_log: (B, S, H); b/c: (B, S, G, N).
+    Returns (y (B, S, H, P), final_state (B, H, P, N) f32)."""
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    L = min(chunk, S)
+    assert S % L == 0, f"seq {S} % chunk {L} != 0"
+    nc = S // L
+
+    kernel = functools.partial(_ssd_kernel, chunk=L, n_chunks=nc)
+    y, hfin = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda bi, h, ic: (bi, ic, h, 0)),
+            pl.BlockSpec((1, L, 1), lambda bi, h, ic: (bi, ic, h)),
+            pl.BlockSpec((1, L, 1, N), lambda bi, h, ic: (bi, ic, h // rep, 0)),
+            pl.BlockSpec((1, L, 1, N), lambda bi, h, ic: (bi, ic, h // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda bi, h, ic: (bi, ic, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bi, h, ic: (bi, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, a_log, b, c)
+    return y, hfin

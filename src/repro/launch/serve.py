@@ -1,0 +1,98 @@
+"""Batched serving driver with Dora-planned placement and a QoE monitor.
+
+Runs prefill + decode over synthetic request batches, reporting
+per-token latency against the QoE target; with ``--dynamics`` it injects
+a mid-run slowdown and shows the runtime adapter's network-only
+rescheduling decision (paper Fig. 16 behavior at example scale).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, reduced_config
+from ..core import (DoraPlanner, DynamicsEvent, QoESpec, Workload,
+                    make_setting)
+from ..models.registry import planning_graph
+from .mesh import make_host_mesh
+from .steps import make_prefill_step, make_serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--t-qoe-ms", type=float, default=200.0)
+    ap.add_argument("--dynamics", action="store_true")
+    ap.add_argument("--setting", default="smart_home_2")
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+
+    # --- Dora plans the edge deployment for this model --------------------
+    topo = make_setting(args.setting)
+    qoe = QoESpec(t_qoe=args.t_qoe_ms / 1e3, lam=100.0)
+    planner = DoraPlanner(planning_graph(cfg, args.prompt_len), topo, qoe)
+    result = planner.plan(Workload(global_batch=args.batch, microbatch_size=1,
+                                   training=False))
+    print("Dora plan:", result.best.summary())
+    print(f"planning took {result.total_s*1e3:.0f}ms "
+          f"(phase1 {result.phase1_s*1e3:.0f}ms, phase2 {result.phase2_s*1e3:.0f}ms)")
+    adapter = planner.make_adapter(result)
+
+    # --- local JAX execution of the serving loop ---------------------------
+    mesh = make_host_mesh()
+    model, prefill_step = make_prefill_step(cfg)
+    _, serve_step = make_serve_step(cfg)
+    max_len = args.prompt_len + args.gen_len
+    with jax.set_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(0))
+        cache = model.init_cache(args.batch, max_len)
+        rng = np.random.default_rng(0)
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                          (args.batch, args.prompt_len)), jnp.int32)
+        extras = {}
+        if cfg.encdec:
+            extras["encoder_frames"] = jnp.zeros(
+                (args.batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+        if cfg.vision_stub:
+            extras["extra_embeddings"] = jnp.zeros(
+                (args.batch, cfg.n_patches, cfg.d_model), jnp.float32)
+        jit_prefill = jax.jit(prefill_step, donate_argnums=(2,))
+        jit_decode = jax.jit(serve_step, donate_argnums=(2,))
+        t0 = time.time()
+        tok, cache = jit_prefill(params, tokens, cache, extras)
+        jax.block_until_ready(tok)
+        print(f"prefill({args.prompt_len} tokens): {(time.time()-t0)*1e3:.1f}ms")
+        lat = []
+        offset = cfg.n_patches if cfg.vision_stub else 0
+        for i in range(args.gen_len):
+            pos = jnp.full((args.batch,), args.prompt_len + offset + i, jnp.int32)
+            t1 = time.time()
+            tok, cache = jit_decode(params, tok, cache, pos)
+            jax.block_until_ready(tok)
+            lat.append((time.time() - t1) * 1e3)
+            if args.dynamics and i == args.gen_len // 2:
+                ev = DynamicsEvent(t=time.time() - t0,
+                                   compute_speed={0: 0.6},
+                                   bandwidth_scale={"wifi": 0.7})
+                plan, action, dt = adapter.on_dynamics(result.best, ev)
+                print(f"  [dynamics] adapter action={action} in {dt*1e3:.0f}ms; "
+                      f"plan latency {result.best.latency*1e3:.0f} -> "
+                      f"{plan.latency*1e3:.0f}ms")
+        lat = np.array(lat[1:])
+        print(f"decode: p50={np.percentile(lat,50):.1f}ms "
+              f"p99={np.percentile(lat,99):.1f}ms "
+              f"QoE target={args.t_qoe_ms:.0f}ms "
+              f"({'MET' if np.percentile(lat,99) < args.t_qoe_ms else 'MISSED'} locally)")
+
+
+if __name__ == "__main__":
+    main()

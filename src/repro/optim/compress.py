@@ -1,0 +1,52 @@
+"""Gradient compression for cross-pod (DCN) synchronization.
+
+int8 quantization with error feedback (EF-SGD style): the quantization
+residual is carried into the next step, so compression adds no bias to
+the long-run gradient signal. Intended for the slow pod axis — ICI
+all-reduces stay full precision; the planner models the 4× byte saving
+via ``Workload.grad_compression``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor absmax int8 quantization → (q int8, scale f32)."""
+    scale = jnp.max(jnp.abs(x)).astype(jnp.float32) / 127.0 + _EPS
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(params) -> Any:
+    """Error-feedback residual state (f32, zero-init, param-shaped)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress(grads, ef_state) -> Tuple[Any, Any, Dict[str, jnp.ndarray]]:
+    """Compress grads with error feedback.
+
+    Returns (decompressed grads — what a receiver reconstructs after the
+    int8 all-reduce — , new residual state, metrics)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = treedef.unflatten([o[0] for o in out])
+    new_e = treedef.unflatten([o[1] for o in out])
+    err = jnp.sqrt(sum(jnp.sum(jnp.square(e)) for _, e in out))
+    return new_g, new_e, {"ef_residual_norm": err}

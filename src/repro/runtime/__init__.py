@@ -1,0 +1,6 @@
+from .heartbeat import Coordinator, DeviceStatus
+from .elastic import ElasticController
+from .pipeline import DoraPipelineExecutor
+
+__all__ = ["Coordinator", "DeviceStatus", "ElasticController",
+           "DoraPipelineExecutor"]

@@ -1,0 +1,77 @@
+"""Elastic training controller: node loss → shrink mesh → replan →
+restore from checkpoint with resharding → resume.
+
+The controller composes the substrate pieces: the Coordinator detects
+failures, Dora's planner re-partitions for the surviving fleet, and the
+Checkpointer's elastic restore maps saved shards onto the new mesh. On
+CPU this is exercised by integration tests with a host mesh that
+shrinks (e.g. 8 → 4 virtual devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from ..checkpoint import Checkpointer, latest_step
+from .heartbeat import Coordinator
+
+
+@dataclasses.dataclass
+class ElasticState:
+    mesh: Any
+    step: int
+    params: Any
+    opt_state: Any
+    generation: int = 0          # bumps on every re-mesh
+
+
+class ElasticController:
+    """Owns the train loop's distributed state across mesh generations."""
+
+    def __init__(self, *, make_mesh: Callable[[int], Any],
+                 spec_fn: Callable[[Any, Any], Tuple[Any, Any]],
+                 ckpt: Checkpointer, n_devices: int):
+        """``make_mesh(n)`` builds a mesh over n devices; ``spec_fn(mesh,
+        shapes)`` returns (param_specs, opt_specs) for that mesh."""
+        self.make_mesh = make_mesh
+        self.spec_fn = spec_fn
+        self.ckpt = ckpt
+        self.n_devices = n_devices
+        self.coordinator = Coordinator(list(range(n_devices)),
+                                       on_failure=self._on_failure)
+        self._pending_failures: List[int] = []
+
+    def _on_failure(self, failed: List[int]) -> None:
+        self._pending_failures.extend(failed)
+
+    def needs_remesh(self) -> bool:
+        return bool(self._pending_failures)
+
+    def remesh(self, state: ElasticState, train_tree_shapes) -> ElasticState:
+        """Shrink to the healthy device count and restore the latest
+        committed checkpoint onto the new mesh.
+
+        ``train_tree_shapes`` — ShapeDtypeStructs of the combined
+        {params, opt} tree (shapes/dtypes only; shardings recomputed
+        for the shrunk mesh by ``spec_fn``)."""
+        healthy = len(self.coordinator.healthy)
+        if healthy == 0:
+            raise RuntimeError("no healthy devices left")
+        new_mesh = self.make_mesh(healthy)
+        specs = self.spec_fn(new_mesh, train_tree_shapes)
+        step = latest_step(self.ckpt.dir)
+        if step is None:
+            raise RuntimeError("no checkpoint to restore after failure")
+
+        structs = jax.tree.map(
+            lambda sh, sp: jax.ShapeDtypeStruct(
+                sh.shape, sh.dtype, sharding=NamedSharding(new_mesh, sp)),
+            train_tree_shapes, specs)
+        tree = self.ckpt.restore(step, structs)
+        self._pending_failures.clear()
+        return ElasticState(mesh=new_mesh, step=step,
+                            params=tree["params"], opt_state=tree["opt"],
+                            generation=state.generation + 1)

@@ -1,0 +1,145 @@
+"""Execute plans on the real (contended) topology; planner comparisons.
+
+Dora plans run through the Phase-2 network scheduler (chunked temporal
+sharing); contention-oblivious baselines execute with fluid-shared
+("fair") contention — what a real shared medium does to them (Fig. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..core.adapter import AdapterConfig
+from ..core.cost_model import Workload
+from ..core.device import Topology, make_setting
+from ..core.graph_builders import paper_model
+from ..core.planner import DoraPlanner, PlanningResult
+from ..core.planning_graph import ModelGraph
+from ..core.plans import ParallelismPlan
+from ..core.qoe import QoESpec
+from ..core.scheduler import NetworkScheduler, SchedulerConfig
+from .baselines import (BaselineError, alpa_plan, asteroid_plan,
+                        edgeshard_plan, metis_plan)
+
+SETTINGS = ("smart_home_1", "smart_home_2", "traffic_monitor", "edge_cluster")
+PAPER_MODELS = ("bert", "qwen3-0.6b", "qwen3-1.7b", "qwen-omni")
+
+
+@dataclasses.dataclass
+class ExecResult:
+    planner: str
+    latency: float = float("inf")       # seconds (iteration or batch-forward)
+    energy: float = float("inf")        # joules over the run unit
+    plan: Optional[ParallelismPlan] = None
+    plan_seconds: float = 0.0           # planning wall time
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+def workload_for(mode: str, global_batch: int = 32,
+                 microbatch: int = 4) -> Workload:
+    """Paper-style workloads: training iterations vs inference forwards.
+
+    Edge tuning state is bf16 params + grads + momentum (3× param bytes):
+    a 6B Qwen-Omni cannot hold fp32 Adam m/v on phones/laptops, and §5's
+    prototype fine-tunes with DDP/PiPPy-style bf16 state.
+    """
+    if mode == "train":
+        return Workload(global_batch=global_batch, microbatch_size=microbatch,
+                        training=True, optimizer_mult=3.0)
+    return Workload(global_batch=max(global_batch // 4, 4),
+                    microbatch_size=1, training=False)
+
+
+def execute_plan(plan: ParallelismPlan, topo: Topology, qoe: QoESpec,
+                 scheduled: bool,
+                 compute_speed: Optional[Dict[int, float]] = None,
+                 bandwidth_scale: Optional[Dict[str, float]] = None
+                 ) -> ParallelismPlan:
+    """Run one plan on the real topology. ``scheduled=True`` applies
+    Dora's Phase-2 chunked schedule; ``False`` is fluid-share contention."""
+    sched = NetworkScheduler(topo, qoe)
+    if scheduled:
+        return sched.refine(plan, compute_speed=compute_speed,
+                            bandwidth_scale=bandwidth_scale)
+    return sched.evaluate_fair(plan, compute_speed=compute_speed,
+                               bandwidth_scale=bandwidth_scale)
+
+
+def _mb_candidates(global_batch: int, base: int) -> Tuple[int, ...]:
+    cands = {base} | {m for m in (1, 2, 4, 8, 16) if global_batch % m == 0}
+    return tuple(sorted(cands))
+
+
+def dora_plan(graph: ModelGraph, topo: Topology, qoe: QoESpec, wl: Workload,
+              top_k: int = 10,
+              scheduler_config: Optional[SchedulerConfig] = None
+              ) -> PlanningResult:
+    from ..core.partitioner import PartitionerConfig
+    pcfg = PartitionerConfig(
+        top_k=top_k,
+        microbatch_sizes=_mb_candidates(wl.global_batch, wl.microbatch_size))
+    planner = DoraPlanner(graph, topo, qoe, partitioner_config=pcfg,
+                          scheduler_config=scheduler_config)
+    return planner.plan(wl)
+
+
+def _run_baseline(name: str, fn: Callable[[], ParallelismPlan],
+                  topo: Topology, qoe: QoESpec) -> ExecResult:
+    t0 = time.perf_counter()
+    try:
+        plan = fn()
+    except BaselineError as e:
+        return ExecResult(planner=name, error=str(e),
+                          plan_seconds=time.perf_counter() - t0)
+    t_plan = time.perf_counter() - t0
+    executed = execute_plan(plan, topo, qoe, scheduled=False)
+    return ExecResult(planner=name, latency=executed.latency,
+                      energy=executed.energy, plan=executed,
+                      plan_seconds=t_plan)
+
+
+def compare_planners(graph: ModelGraph, topo: Topology, wl: Workload,
+                     qoe: Optional[QoESpec] = None, top_k: int = 10
+                     ) -> Dict[str, ExecResult]:
+    """Fig. 8/9 harness: every planner on one (model, setting, workload)."""
+    qoe = qoe or QoESpec(t_qoe=0.0, lam=1e15)   # latency-optimized comparison
+    out: Dict[str, ExecResult] = {}
+    out["edgeshard"] = _run_baseline(
+        "edgeshard", lambda: edgeshard_plan(graph, topo, wl), topo, qoe)
+    out["asteroid"] = _run_baseline(
+        "asteroid", lambda: asteroid_plan(graph, topo, wl), topo, qoe)
+    out["alpa"] = _run_baseline(
+        "alpa", lambda: alpa_plan(graph, topo, wl), topo, qoe)
+    out["metis"] = _run_baseline(
+        "metis", lambda: metis_plan(graph, topo, wl), topo, qoe)
+    t0 = time.perf_counter()
+    try:
+        res = dora_plan(graph, topo, qoe, wl, top_k=top_k)
+        best = res.best
+        out["dora"] = ExecResult(planner="dora", latency=best.latency,
+                                 energy=best.energy, plan=best,
+                                 plan_seconds=res.total_s)
+    except Exception as e:  # noqa: BLE001
+        out["dora"] = ExecResult(planner="dora", error=str(e),
+                                 plan_seconds=time.perf_counter() - t0)
+    return out
+
+
+def best_baseline(results: Dict[str, ExecResult]) -> Tuple[str, ExecResult]:
+    ok = {k: v for k, v in results.items() if k != "dora" and v.ok}
+    if not ok:
+        raise RuntimeError("no baseline produced a valid plan")
+    name = min(ok, key=lambda k: ok[k].latency)
+    return name, ok[name]
+
+
+def setting_and_graph(setting: str, model: str, mode: str,
+                      seq_len: int = 512) -> Tuple[Topology, ModelGraph]:
+    topo = make_setting(setting)
+    graph = paper_model(model, seq_len=seq_len if mode == "train" else 1)
+    return topo, graph

@@ -1,0 +1,43 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the real
+single CPU device; only launch/dryrun.py forces 512 host devices."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+from repro.core.cost_model import Workload  # noqa: E402
+from repro.core.device import make_setting  # noqa: E402
+from repro.core.graph_builders import paper_model  # noqa: E402
+from repro.core.qoe import QoESpec  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def smart_home_2():
+    return make_setting("smart_home_2")
+
+
+@pytest.fixture(scope="session")
+def edge_cluster():
+    return make_setting("edge_cluster")
+
+
+@pytest.fixture(scope="session")
+def qwen06_graph():
+    return paper_model("qwen3-0.6b", seq_len=512)
+
+
+@pytest.fixture(scope="session")
+def bert_graph():
+    return paper_model("bert", seq_len=512)
+
+
+@pytest.fixture()
+def train_wl():
+    return Workload(global_batch=32, microbatch_size=4, optimizer_mult=3.0)
+
+
+@pytest.fixture()
+def latency_qoe():
+    return QoESpec(t_qoe=0.0, lam=1e15)

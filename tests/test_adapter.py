@@ -1,0 +1,120 @@
+"""Phase-3 runtime adapter: Pareto filter, horizon LP, dynamics paths."""
+import math
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.adapter import (AdapterConfig, DynamicsEvent, RuntimeAdapter,
+                                pareto_filter)
+from repro.core.cost_model import Workload
+from repro.core.device import make_setting
+from repro.core.graph_builders import paper_model
+from repro.core.partitioner import ModelPartitioner, PartitionerConfig
+from repro.core.plans import ParallelismPlan, Stage
+from repro.core.qoe import QoESpec
+from repro.core.scheduler import NetworkScheduler
+
+
+def _plan(lat, energy):
+    st_ = Stage(node_ids=[0], devices=[0], microbatch_split={0: 1.0},
+                fwd_time=lat, bwd_time=0.0, param_bytes=1e6)
+    return ParallelismPlan(stages=[st_], microbatch_size=1, n_microbatches=1,
+                           latency=lat, energy=energy, objective=energy)
+
+
+@given(st.lists(st.tuples(st.floats(0.01, 10.0), st.floats(0.01, 100.0)),
+                min_size=1, max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_pareto_filter_property(pts):
+    plans = [_plan(l, e) for l, e in pts]
+    front = pareto_filter(plans)
+    assert front
+    # no member dominates another
+    for a in front:
+        for b in front:
+            if a is b:
+                continue
+            assert not (a.latency <= b.latency and a.energy <= b.energy)
+    # every input is dominated-or-equal by some frontier member
+    for p in plans:
+        assert any(f.latency <= p.latency + 1e-12 and f.energy <= p.energy + 1e-12
+                   for f in front)
+
+
+@pytest.fixture(scope="module")
+def adapter():
+    topo = make_setting("smart_home_2")
+    graph = paper_model("qwen3-0.6b", seq_len=512)
+    qoe = QoESpec(t_qoe=10.0, lam=100.0, deadline=3600.0)
+    part = ModelPartitioner(graph, topo, qoe, PartitionerConfig(
+        top_k=6, microbatch_sizes=(1, 2, 4, 8)))
+    wl = Workload(global_batch=32, microbatch_size=4, optimizer_mult=3.0)
+    sched = NetworkScheduler(topo, qoe)
+    plans = sched.refine_candidates(part.plan(wl, pool=True), keep=6)
+    return RuntimeAdapter(plans, topo, qoe, sched)
+
+
+def test_mixture_meets_progress(adapter):
+    w_rem, d_rem = 100.0, 3600.0
+    mix = adapter.mix_for_horizon(w_rem, d_rem, horizon=60.0)
+    assert mix
+    ep = (60.0 / d_rem) * w_rem
+    done = sum(frac * (60.0 - adapter.switch_cost(None, p)) / p.latency
+               for p, frac in mix)
+    assert done >= ep * 0.999
+    assert sum(f for _, f in mix) <= 1.0 + 1e-9
+
+
+def test_mixture_prefers_cheap_when_slack(adapter):
+    """With a loose deadline the mixture leans on low-energy-rate plans."""
+    tight = adapter.mix_for_horizon(1000.0, 1200.0, horizon=60.0)
+    loose = adapter.mix_for_horizon(10.0, 36000.0, horizon=60.0)
+
+    def mean_e_rate(mix):
+        tot = sum(f for _, f in mix)
+        return sum((p.energy / p.latency) * f for p, f in mix) / tot
+    assert mean_e_rate(loose) <= mean_e_rate(tight) + 1e-9
+
+
+def test_run_interruptible_meets_deadline(adapter):
+    res = adapter.run_interruptible(total_iters=200.0, deadline=3600.0)
+    assert res["met_deadline"]
+    assert res["done"] >= 200.0
+
+
+def test_run_interruptible_absorbs_slowdown(adapter):
+    ev = DynamicsEvent(t=120.0, compute_speed={0: 0.5, 1: 0.5})
+    res = adapter.run_interruptible(total_iters=150.0, deadline=3600.0,
+                                    dynamics=[ev])
+    assert res["done"] >= 150.0
+
+
+def test_on_dynamics_small_fluctuation_reschedules(adapter):
+    cur = adapter.plans[0]
+    ev = DynamicsEvent(t=1.0, compute_speed={0: 0.95})
+    plan, action, dt = adapter.on_dynamics(cur, ev)
+    assert action == "reschedule"
+    assert dt < 5.0                       # paper: subsecond-to-seconds
+
+
+def test_on_dynamics_large_shift_replans(adapter):
+    cur = adapter.plans[0]
+    ev = DynamicsEvent(t=1.0, compute_speed={0: 0.3})
+    plan, action, _ = adapter.on_dynamics(
+        cur, ev, replan_fn=lambda: list(adapter.all_plans))
+    assert action == "replan"
+    assert "switch_stall_s" in plan.meta
+
+
+def test_switch_cost_delta_less_than_full(adapter):
+    cfg_full = AdapterConfig(delta_switching=False, async_switching=False)
+    cfg_delta = AdapterConfig(delta_switching=True, async_switching=False)
+    a, b = adapter.plans[0], adapter.plans[-1]
+    if a is b:
+        pytest.skip("need two distinct plans")
+    full = RuntimeAdapter(adapter.all_plans, adapter.topo, adapter.qoe,
+                          adapter.scheduler, cfg_full).switch_cost(a, b)
+    delta = RuntimeAdapter(adapter.all_plans, adapter.topo, adapter.qoe,
+                           adapter.scheduler, cfg_delta).switch_cost(a, b)
+    assert delta <= full + 1e-9

@@ -1,0 +1,31 @@
+"""Multi-device integration tests (subprocess: they need >1 host device,
+which must not leak into the rest of the suite)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+
+
+def _run(script, timeout=420):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, os.path.join(HERE, "helpers", script)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+@pytest.mark.slow
+def test_pipeline_executor_matches_sequential():
+    res = _run("pipeline_check.py")
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "PIPELINE_OK" in res.stdout
+
+
+@pytest.mark.slow
+def test_elastic_restart_8_to_4_devices():
+    res = _run("elastic_check.py")
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "ELASTIC_OK" in res.stdout

@@ -1,0 +1,103 @@
+"""Discrete-event engine correctness (unit + property tests)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.engine import EventEngine, Task, chunk_comm_tasks
+
+
+def _run(tasks, caps, mode="scheduled", speed=None):
+    eng = EventEngine(tasks, caps, comm_mode=mode, compute_speed=speed)
+    eng.assign_priorities()
+    return eng.run()
+
+
+def test_serial_chain():
+    tasks = [Task("a", "compute", duration=1.0, executor="e0"),
+             Task("b", "compute", duration=2.0, executor="e0", deps=("a",)),
+             Task("c", "compute", duration=3.0, executor="e1", deps=("b",))]
+    res = _run(tasks, {})
+    assert res.makespan == pytest.approx(6.0)
+
+
+def test_exclusive_executor_serializes():
+    tasks = [Task(f"t{i}", "compute", duration=1.0, executor="e0")
+             for i in range(4)]
+    res = _run(tasks, {})
+    assert res.makespan == pytest.approx(4.0)
+
+
+def test_parallel_executors_overlap():
+    tasks = [Task(f"t{i}", "compute", duration=1.0, executor=f"e{i}")
+             for i in range(4)]
+    res = _run(tasks, {})
+    assert res.makespan == pytest.approx(1.0)
+
+
+def test_fair_sharing_splits_bandwidth():
+    # two 100-byte transfers on a 100 B/s medium: fluid share -> both take 2s
+    tasks = [Task("x", "comm", nbytes=100, resources=("net",)),
+             Task("y", "comm", nbytes=100, resources=("net",))]
+    res = _run(tasks, {"net": 100.0}, mode="fair")
+    assert res.makespan == pytest.approx(2.0, rel=1e-6)
+
+
+def test_scheduled_serializes_but_same_total():
+    tasks = [Task("x", "comm", nbytes=100, resources=("net",)),
+             Task("y", "comm", nbytes=100, resources=("net",))]
+    res = _run(tasks, {"net": 100.0}, mode="scheduled")
+    assert res.makespan == pytest.approx(2.0, rel=1e-6)
+    # but the first one finished at t=1 (exclusive), unlike fair
+    assert min(res.finish["x"], res.finish["y"]) == pytest.approx(1.0)
+
+
+def test_net_latency_adds_fixed_cost():
+    t = [Task("x", "comm", nbytes=100, resources=("net",), net_latency=0.5)]
+    res = _run(t, {"net": 100.0})
+    assert res.makespan == pytest.approx(1.5, rel=1e-6)
+
+
+def test_compute_speed_scaling():
+    tasks = [Task("a", "compute", duration=1.0, executor="e0")]
+    res = _run(tasks, {}, speed={"e0": 0.5})
+    assert res.makespan == pytest.approx(2.0)
+
+
+def test_chunking_preserves_bytes_and_deps():
+    tasks = [Task("f", "compute", duration=1.0, executor="e0"),
+             Task("x", "comm", nbytes=100, resources=("net",), deps=("f",)),
+             Task("g", "compute", duration=1.0, executor="e0", deps=("x",))]
+    chunked = chunk_comm_tasks(tasks, 4)
+    comm = [t for t in chunked if t.kind == "comm"]
+    assert len(comm) == 4
+    assert sum(t.nbytes for t in comm) == pytest.approx(100)
+    names = {t.name: t for t in chunked}
+    assert names["g"].deps == ("x#c3",)
+    res = _run(chunked, {"net": 100.0})
+    assert res.makespan == pytest.approx(3.0, rel=1e-6)
+
+
+@given(st.lists(st.tuples(st.floats(0.01, 5.0), st.integers(0, 2)),
+                min_size=1, max_size=12))
+@settings(max_examples=40, deadline=None)
+def test_makespan_bounds(items):
+    """Makespan ≥ max single task; ≤ serial sum (for an exclusive chain
+    of executors and one shared medium)."""
+    tasks = []
+    for i, (dur, kind) in enumerate(items):
+        deps = (f"t{i-1}",) if i > 0 else ()
+        if kind == 0:
+            tasks.append(Task(f"t{i}", "compute", duration=dur,
+                              executor="e0", deps=deps))
+        else:
+            tasks.append(Task(f"t{i}", "comm", nbytes=dur * 10,
+                              resources=("net",), deps=deps))
+    res = _run(tasks, {"net": 10.0})
+    serial = sum(d for d, k in items)    # comm at full bw == dur
+    assert res.makespan <= serial * (1 + 1e-9)
+    assert res.makespan >= max(d for d, k in items) - 1e-9
+
+
+def test_stall_detection():
+    with pytest.raises(ValueError):
+        EventEngine([Task("a", "compute", deps=("missing",))], {})

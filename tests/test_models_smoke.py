@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests on REDUCED same-family configs (CPU).
+
+For every assigned arch: one train step (loss finite, shapes right, no
+NaNs) and a prefill→decode consistency check (the cached decode path
+must produce the same next-token logits as the uncached forward).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, reduced_config
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng):
+    toks = jax.random.randint(rng, (B, S + 1), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.encdec:
+        batch["encoder_frames"] = jax.random.normal(
+            rng, (B, cfg.enc_seq, cfg.d_model), jnp.float32) * 0.02
+    if cfg.vision_stub:
+        batch["extra_embeddings"] = jax.random.normal(
+            rng, (B, cfg.n_patches, cfg.d_model), jnp.float32) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    batch = _batch(cfg, rng)
+    loss, metrics = model.loss(params, batch, remat="none")
+    assert jnp.isfinite(loss), f"{arch}: loss not finite"
+    assert float(loss) > 0.0
+    logits, _ = model.apply(params, batch["tokens"],
+                            extra_embeddings=batch.get("extra_embeddings"),
+                            **({"encoder_frames": batch["encoder_frames"]}
+                               if cfg.encdec else {}))
+    prefix = cfg.n_patches if cfg.vision_stub else 0
+    assert logits.shape == (B, S + prefix, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # padded vocab rows are masked to -inf
+    if cfg.padded_vocab != cfg.vocab_size:
+        assert float(jnp.max(logits[..., cfg.vocab_size:])) < -1e30
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_updates_params(arch):
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(1)
+    params = model.init(rng)
+    opt = adamw_init(params)
+    batch = _batch(cfg, rng)
+
+    def loss_fn(p):
+        loss, _ = model.loss(p, batch, remat="none")
+        return loss
+    loss0, grads = jax.value_and_grad(loss_fn)(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gnorm) and float(gnorm) > 0.0, f"{arch}: dead grads"
+    params2, opt2, _ = adamw_update(grads, opt, params, 1e-3, AdamWConfig())
+    delta = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(params2)))
+    assert delta > 0.0, f"{arch}: params unchanged"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """decode(t) after prefill(0..t-1) == apply(0..t) at the last position."""
+    cfg = reduced_config(arch)
+    if cfg.encdec:
+        pytest.skip("enc-dec consistency covered in test_encdec_roundtrip")
+    if cfg.n_experts:
+        # capacity dropping depends on the dispatch batch (full sequence vs
+        # one token); make routing lossless so the paths are comparable
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(2)
+    params = model.init(rng)
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    extra = None
+    if cfg.vision_stub:
+        extra = jax.random.normal(rng, (B, cfg.n_patches, cfg.d_model),
+                                  jnp.float32) * 0.02
+
+    max_len = S + 8 + (cfg.n_patches if cfg.vision_stub else 0)
+    cache = model.init_cache(B, max_len)
+    logits_p, cache = model.prefill(params, toks[:, :-1], cache,
+                                    extra_embeddings=extra)
+    prefix = cfg.n_patches if cfg.vision_stub else 0
+    pos = jnp.full((B,), S - 1 + prefix, jnp.int32)
+    logits_d, _ = model.decode(params, toks[:, -1:], cache, pos)
+
+    logits_full, _ = model.apply(params, toks, extra_embeddings=extra)
+    np.testing.assert_allclose(
+        np.asarray(logits_d[:, 0], np.float32),
+        np.asarray(logits_full[:, -1], np.float32), atol=2e-3, rtol=2e-3)
+
+
+def test_encdec_roundtrip():
+    cfg = reduced_config("whisper_small")
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(3)
+    params = model.init(rng)
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    frames = jax.random.normal(rng, (B, cfg.enc_seq, cfg.d_model),
+                               jnp.float32) * 0.02
+    cache = model.init_cache(B, S + 8)
+    logits_p, cache = model.prefill(params, toks[:, :-1], cache,
+                                    encoder_frames=frames)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    logits_d, _ = model.decode(params, toks[:, -1:], cache, pos)
+    logits_full, _ = model.apply(params, toks, encoder_frames=frames)
+    np.testing.assert_allclose(
+        np.asarray(logits_d[:, 0], np.float32),
+        np.asarray(logits_full[:, -1], np.float32), atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["h2o_danube_1_8b", "mamba2_780m",
+                                  "recurrentgemma_9b"])
+def test_long_context_states_bounded(arch):
+    """Sub-quadratic archs: decode-state size is independent of history."""
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    short = jax.eval_shape(lambda: model.init_cache(1, 64))
+    long = jax.eval_shape(lambda: model.init_cache(1, 4096))
+    short_b = sum(np.prod(l.shape) * l.dtype.itemsize
+                  for l in jax.tree.leaves(short))
+    long_b = sum(np.prod(l.shape) * l.dtype.itemsize
+                 for l in jax.tree.leaves(long))
+    if cfg.ssm or (cfg.block_pattern and cfg.window):
+        # recurrent state or bounded window: sub-linear growth
+        assert long_b <= short_b * 70   # window ratio, not 64× batch growth

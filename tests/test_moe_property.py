@@ -1,0 +1,99 @@
+"""MoE grouped-dispatch invariants (property tests for the rewritten
+scatter/gather path)."""
+import dataclasses
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import reduced_config
+from repro.models.mlp import apply_moe, dispatch_groups, init_moe, moe_capacity
+
+
+def _cfg(E=4, K=2, d=16, f=32, cap=8.0, groups=0):
+    base = reduced_config("olmoe_1b_7b")
+    return dataclasses.replace(base, n_experts=E, experts_per_token=K,
+                               d_model=d, moe_d_ff=f, capacity_factor=cap,
+                               router_aux_coef=0.0, moe_groups=groups)
+
+
+def _dense_reference(p, x, cfg):
+    """Naive per-token top-k mixture over ALL experts (no capacity)."""
+    B, S, D = x.shape
+    xf = np.asarray(x.reshape(-1, D), np.float64)
+    router = np.asarray(p["router"], np.float64)
+    logits = xf @ router
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    out = np.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        top = np.argsort(-probs[t])[: cfg.experts_per_token]
+        g = probs[t, top]
+        g = g / g.sum()
+        for e, w in zip(top, g):
+            up = xf[t] @ np.asarray(p["w_up"][e], np.float64)
+            gt = xf[t] @ np.asarray(p["w_gate"][e], np.float64)
+            silu = gt / (1.0 + np.exp(-gt)) * up
+            out[t] += w * (silu @ np.asarray(p["w_down"][e], np.float64))
+    return out.reshape(B, S, D)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([1, 2, 4]),
+       st.sampled_from([4, 8]))
+@settings(max_examples=10, deadline=None)
+def test_lossless_capacity_matches_dense_mixture(seed, B, S):
+    cfg = _cfg()
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    p = init_moe(k1, cfg, jnp.float32)
+    x = jax.random.normal(k2, (B, S, cfg.d_model), jnp.float32) * 0.5
+    out, aux = apply_moe(p, x, cfg)
+    ref = _dense_reference(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-3, rtol=1e-3)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_group_count_invariance(seed):
+    """With lossless capacity, routing is per-token → the group count
+    must not change the result."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    outs = []
+    for groups in (1, 2, 4):
+        cfg = _cfg(groups=groups)
+        p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(k2, (2, 8, cfg.d_model), jnp.float32) * 0.5
+        out, _ = apply_moe(p, x, cfg)
+        outs.append(np.asarray(out))
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], atol=1e-5, rtol=1e-5)
+
+
+def test_capacity_drops_tokens():
+    """Tiny capacity must produce a different (partially-zero) output and
+    never NaN."""
+    cfg = _cfg(cap=0.05, groups=1)      # capacity 2/expert for 64 tokens
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    out, aux = apply_moe(p, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    full = _cfg(cap=float(cfg.n_experts))
+    out_full, _ = apply_moe(p, x, full)
+    assert float(jnp.max(jnp.abs(out - out_full))) > 1e-3
+
+
+def test_dispatch_groups_divides():
+    cfg = _cfg()
+    for t in (32, 48, 64, 1024, 7):
+        g = dispatch_groups(t, cfg)
+        assert t % g == 0
+        assert t // g >= cfg.experts_per_token or g == 1
+
+
+def test_capacity_formula():
+    cfg = _cfg(E=8, K=2, cap=1.25)
+    assert moe_capacity(cfg, 64) == int(1.25 * 64 * 2 / 8) + 1

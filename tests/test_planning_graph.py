@@ -1,0 +1,67 @@
+"""Planning-graph invariants (unit + hypothesis property tests)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.graph_builders import GraphSpec, build_lm_graph, paper_model
+from repro.core.planning_graph import LayerNode, ModelGraph
+
+
+def _random_chain(n, flops, params):
+    nodes = [LayerNode(f"n{i}", flops_fwd=f, param_bytes=p, act_bytes=64.0)
+             for i, (f, p) in enumerate(zip(flops, params))]
+    return ModelGraph.chain(nodes)
+
+
+@given(st.lists(st.floats(1.0, 1e9), min_size=2, max_size=30),
+       st.floats(0.0, 0.5))
+@settings(max_examples=50, deadline=None)
+def test_compress_preserves_totals(params, delta):
+    flops = [p * 3.0 for p in params]
+    g = _random_chain(len(params), flops, params)
+    c = g.compress(delta)
+    assert c.total_params == pytest.approx(g.total_params, rel=1e-9)
+    assert c.total_flops_fwd == pytest.approx(g.total_flops_fwd, rel=1e-9)
+    assert 1 <= len(c.nodes) <= len(g.nodes)
+
+
+@given(st.lists(st.floats(1.0, 1e6), min_size=2, max_size=20))
+@settings(max_examples=30, deadline=None)
+def test_compress_merges_below_threshold(params):
+    g = _random_chain(len(params), params, params)
+    c = g.compress(1.01)     # budget > total: everything merges into one
+    assert len(c.nodes) == 1
+
+
+def test_serial_decompose_chain():
+    g = _random_chain(5, [1] * 5, [1] * 5)
+    chains = g.serial_decompose()
+    assert chains == [[0, 1, 2, 3, 4]]
+
+
+def test_serial_decompose_multimodal_dag():
+    g = paper_model("qwen-omni", seq_len=128)
+    chains = g.serial_decompose()
+    covered = sorted(i for ch in chains for i in ch)
+    assert covered == list(range(len(g.nodes)))        # exact cover
+    assert len(chains) >= 3                            # backbone + 2 encoders
+    # every chain's internal edges are real graph edges
+    edge_set = set(g.edges)
+    for ch in chains:
+        for a, b in zip(ch[:-1], ch[1:]):
+            assert (a, b) in edge_set
+
+
+def test_cycle_detection():
+    nodes = [LayerNode(f"n{i}", 1.0, 1.0, 1.0) for i in range(3)]
+    with pytest.raises(ValueError):
+        ModelGraph(nodes, [(0, 1), (1, 2), (2, 0)])
+
+
+def test_lm_graph_param_sanity():
+    spec = GraphSpec("toy", n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+                     d_ff=256, vocab=1000, seq_len=32)
+    g = build_lm_graph(spec)
+    assert len(g.nodes) == 6                           # embed + 4 + head
+    assert g.total_params > 0
+    assert all(n.flops_bwd == 2.0 * n.flops_fwd for n in g.nodes)

@@ -1,0 +1,68 @@
+"""Pipeline-latency estimators + paper Appendix Algorithm 2."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import profiler
+
+
+def test_gpipe_single_stage():
+    # one stage: M*(f+b), no overlap possible
+    assert profiler.gpipe_latency([2.0], [1.0], 4) == pytest.approx(12.0)
+
+
+def test_gpipe_two_stage_known():
+    # classic: fwd wave + bwd wave with bubbles
+    lat = profiler.gpipe_latency([1.0, 1.0], [1.0, 1.0], 2)
+    # f0m0=1 f1m0=2, f0m1=2 f1m1=3; b1m0=4 b0m0=5 b1m1=5 b0m1=6
+    assert lat == pytest.approx(6.0)
+
+
+def test_1f1b_no_worse_than_gpipe():
+    bf, bb = [1.0, 2.0, 1.5], [2.0, 3.0, 2.5]
+    for m in (1, 2, 4, 8):
+        g = profiler.gpipe_latency(bf, bb, m)
+        o = profiler.one_f_one_b_latency(bf, bb, m)
+        assert o <= g * (1 + 1e-9)
+
+
+@given(st.lists(st.floats(0.1, 5.0), min_size=1, max_size=5),
+       st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_latency_lower_bounds(bf, m):
+    bb = [2.0 * f for f in bf]
+    lat_g = profiler.gpipe_latency(bf, bb, m)
+    lat_o = profiler.one_f_one_b_latency(bf, bb, m)
+    # ≥ bottleneck stage busy time; ≥ critical path of one microbatch
+    bott = max(f + b for f, b in zip(bf, bb)) * m
+    path = sum(bf) + sum(bb)
+    for lat in (lat_g, lat_o):
+        assert lat >= bott - 1e-9
+        assert lat >= path - 1e-9
+
+
+@given(st.lists(st.floats(0.1, 5.0), min_size=2, max_size=6))
+@settings(max_examples=30, deadline=None)
+def test_comm_increases_latency(bf):
+    bb = list(bf)
+    m = 4
+    base = profiler.one_f_one_b_latency(bf, bb, m)
+    comm = [0.5] * (len(bf) - 1)
+    with_comm = profiler.one_f_one_b_latency(bf, bb, m, comm, comm)
+    assert with_comm >= base
+
+
+def test_alg2_start_phase_bounds():
+    """Algorithm 2's start-phase estimate is ≥ the plain forward wave."""
+    bf = [1.0, 2.0, 1.0]
+    bb = [2.0, 4.0, 2.0]
+    est = profiler.alg2_start_phase(bf, bb, 0)
+    assert est >= sum(bf) - 1e-9
+
+
+def test_alg2_end_phase_monotone_steps():
+    bf = [1.0, 2.0, 1.0]
+    bb = [2.0, 4.0, 2.0]
+    out = profiler.alg2_end_phase(bf, bb, 0)
+    assert len(out) == 2 * len(bf) - 1
+    assert all(v > 0 for v in out)

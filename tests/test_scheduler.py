@@ -1,0 +1,97 @@
+"""Phase-2 network scheduler: CEP validity, bounds, chunk knob."""
+import pytest
+
+from repro.core.cep import build_cep, cep_resource_caps
+from repro.core.cost_model import CostModel, Workload
+from repro.core.device import make_setting
+from repro.core.engine import EventEngine
+from repro.core.graph_builders import paper_model
+from repro.core.partitioner import ModelPartitioner, PartitionerConfig
+from repro.core.qoe import QoESpec
+from repro.core.scheduler import NetworkScheduler, SchedulerConfig
+
+LAT = QoESpec(t_qoe=0.0, lam=1e15)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    topo = make_setting("smart_home_2")
+    graph = paper_model("qwen3-0.6b", seq_len=512)
+    part = ModelPartitioner(graph, topo, LAT, PartitionerConfig(top_k=4))
+    wl = Workload(global_batch=32, microbatch_size=4, optimizer_mult=3.0)
+    plans = part.plan(wl)
+    return topo, plans
+
+
+def test_cep_task_counts(setup):
+    topo, plans = setup
+    p = plans[0]
+    tasks = build_cep(p, topo)
+    S, M = p.n_stages, p.n_microbatches
+    n_f = sum(1 for t in tasks if t.name.startswith("F"))
+    n_b = sum(1 for t in tasks if t.name.startswith("B"))
+    n_a = sum(1 for t in tasks if t.name.startswith("A"))
+    assert n_f == S * M and n_b == S * M
+    assert n_a == (S - 1) * M
+    # every dependency resolves
+    names = {t.name for t in tasks}
+    for t in tasks:
+        assert all(d in names for d in t.deps)
+
+
+def test_refine_never_loses_to_fair(setup):
+    topo, plans = setup
+    sched = NetworkScheduler(topo, LAT)
+    for p in plans[:3]:
+        fair = sched.evaluate_fair(p)
+        refined = sched.refine(p)
+        assert refined.latency <= fair.latency * (1 + 1e-9)
+
+
+def test_lower_bound_is_a_bound(setup):
+    topo, plans = setup
+    sched = NetworkScheduler(topo, LAT)
+    for p in plans[:3]:
+        refined = sched.refine(p)
+        lb = refined.meta["lp_bound"]
+        assert refined.latency >= lb * (1 - 1e-9)
+
+
+def test_bandwidth_feasibility(setup):
+    """No resource is busy for more seconds than the makespan."""
+    topo, plans = setup
+    p = plans[0]
+    tasks = build_cep(p, topo)
+    eng = EventEngine(tasks, cep_resource_caps(topo), comm_mode="fair")
+    eng.assign_priorities()
+    res = eng.run()
+    for r, busy in res.resource_busy.items():
+        assert busy <= res.makespan * (1 + 1e-6)
+
+
+def test_refine_candidates_sorted_and_priced(setup):
+    topo, plans = setup
+    sched = NetworkScheduler(topo, LAT)
+    out = sched.refine_candidates(plans, keep=2)
+    assert len(out) == len(plans)
+    objs = [p.objective for p in out]
+    assert objs == sorted(objs)
+    for p in out:
+        assert p.latency > 0 and p.energy > 0
+
+
+def test_bandwidth_scale_slows_things(setup):
+    topo, plans = setup
+    sched = NetworkScheduler(topo, LAT)
+    base = sched.refine(plans[0])
+    slow = sched.refine(plans[0], bandwidth_scale={"wifi": 0.25})
+    assert slow.latency >= base.latency
+
+
+def test_compute_speed_slows_things(setup):
+    topo, plans = setup
+    sched = NetworkScheduler(topo, LAT)
+    base = sched.refine(plans[0])
+    slow = sched.refine(plans[0],
+                        compute_speed={d: 0.5 for d in range(topo.n)})
+    assert slow.latency > base.latency

@@ -1,0 +1,102 @@
+"""Data pipeline, optimizer, LR schedule, heartbeat coordinator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adapter import DynamicsEvent
+from repro.data import DataConfig, TokenPipeline, synthetic_stream
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from repro.runtime.heartbeat import Coordinator
+
+
+# ---------------------------------------------------------------- data
+def test_synthetic_stream_deterministic():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4, seed=7)
+    a = next(synthetic_stream(cfg))
+    b = next(synthetic_stream(cfg))
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (4, 17)
+    assert a.min() >= 0 and a.max() < 100
+
+
+def test_token_pipeline_shapes():
+    cfg = DataConfig(vocab_size=64, seq_len=8, global_batch=2)
+    pipe = TokenPipeline(cfg)
+    batch = next(pipe)
+    assert batch["tokens"].shape == (2, 8)
+    assert batch["labels"].shape == (2, 8)
+    # labels are tokens shifted by one
+    nxt = next(pipe)
+    assert nxt["tokens"].shape == (2, 8)
+    pipe.close()
+
+
+def test_pipeline_labels_are_shifted():
+    cfg = DataConfig(vocab_size=64, seq_len=8, global_batch=2, seed=3)
+    raw = next(synthetic_stream(cfg))
+    pipe = TokenPipeline(cfg)
+    batch = next(pipe)
+    np.testing.assert_array_equal(np.asarray(batch["tokens"]), raw[:, :-1])
+    np.testing.assert_array_equal(np.asarray(batch["labels"]), raw[:, 1:])
+    pipe.close()
+
+
+# ---------------------------------------------------------------- optim
+def test_adamw_minimizes_quadratic():
+    params = {"x": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(weight_decay=0.0)
+
+    def loss(p):
+        return jnp.sum(p["x"] ** 2)
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(g, opt, params, 0.05, cfg)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_grad_clipping():
+    params = {"x": jnp.ones((4,))}
+    opt = adamw_init(params)
+    g = {"x": jnp.full((4,), 100.0)}
+    _, _, metrics = adamw_update(g, opt, params, 1e-3,
+                                 AdamWConfig(clip_norm=1.0))
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+    assert float(metrics["clip_scale"]) == pytest.approx(1.0 / 200.0)
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(jnp.asarray(s), peak_lr=1.0, warmup=10,
+                               total=100)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0 + 1e-6           # warmup rises
+    assert max(lrs) <= 1.0 + 1e-6                  # peak at warmup end
+    assert abs(lrs.index(max(lrs)) - 10) <= 1
+    assert lrs[-1] < 0.2                           # decays
+
+
+# ---------------------------------------------------------------- heartbeat
+def test_coordinator_fluctuation_routing():
+    events = {"resched": [], "replan": []}
+    c = Coordinator([0, 1, 2],
+                    on_reschedule=lambda e: events["resched"].append(e),
+                    on_replan=lambda e: events["replan"].append(e))
+    c.beat(0, 1.0, speed=0.95)       # 5% -> reschedule
+    c.beat(1, 1.0, speed=0.50)       # 50% -> replan
+    assert len(events["resched"]) == 1
+    assert len(events["replan"]) == 1
+
+
+def test_coordinator_failure_and_reelection():
+    failed_log = []
+    c = Coordinator([0, 1, 2], beat_interval=1.0, miss_limit=3,
+                    on_failure=lambda f: failed_log.extend(f))
+    for t in (1.0, 2.0, 3.0):
+        c.beat(1, t)
+        c.beat(2, t)
+        # device 0 (the coordinator) goes silent after t=0
+    newly = c.tick(4.0)
+    assert newly == [0]
+    assert failed_log == [0]
+    assert c.coordinator_id == 1      # deterministic re-election
+    assert c.healthy == [1, 2]
