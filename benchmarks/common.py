@@ -8,16 +8,22 @@ from typing import Dict, List, Optional, Sequence
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.scenarios import PAPER_SETTINGS, list_scenarios  # noqa: E402
+
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
 
 MODELS_TRAIN = ["bert", "qwen3-0.6b", "qwen3-1.7b", "qwen-omni"]
 MODELS_INFER = ["qwen3-0.6b", "qwen3-1.7b", "qwen-omni"]
-SETTINGS = ["smart_home_1", "smart_home_2", "traffic_monitor", "edge_cluster"]
+# the paper's Table-3 comparison set, from the scenario registry
+SETTINGS = list(PAPER_SETTINGS)
+# every registered deployment (paper + new) for the scenario sweep
+ALL_SCENARIOS = list_scenarios()
 
 if QUICK:
     MODELS_TRAIN = ["bert", "qwen3-0.6b"]
     MODELS_INFER = ["qwen3-0.6b"]
     SETTINGS = ["smart_home_2", "edge_cluster"]
+    ALL_SCENARIOS = ["smart_home_2", "retail_analytics"]
 
 
 class Claim:

@@ -11,7 +11,7 @@ from .common import MODELS_INFER, MODELS_TRAIN, SETTINGS, Claim, table
 
 from repro.core.qoe import QoESpec
 from repro.sim.runner import (best_baseline, compare_planners, dora_plan,
-                              setting_and_graph, workload_for)
+                              scenario_case)
 
 
 def _one(mode, models, report, fig):
@@ -19,8 +19,7 @@ def _one(mode, models, report, fig):
     cached = report.data.get("fig8" if mode == "train" else "fig9", {})
     for model in models:
         for setting in SETTINGS:
-            topo, graph = setting_and_graph(setting, model, mode)
-            wl = workload_for(mode)
+            topo, graph, wl = scenario_case(setting, model=model, mode=mode)
             res = cached.get((model, setting)) or compare_planners(
                 graph, topo, wl)
             try:

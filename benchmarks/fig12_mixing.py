@@ -11,7 +11,7 @@ import math
 from .common import Claim, table
 
 from repro.core.qoe import QoESpec
-from repro.sim.runner import dora_plan, setting_and_graph, workload_for
+from repro.sim.runner import dora_plan, scenario_case
 from repro.core.adapter import RuntimeAdapter
 from repro.core.scheduler import NetworkScheduler
 
@@ -19,8 +19,7 @@ ITERS = 6000.0
 
 
 def run(report) -> None:
-    topo, graph = setting_and_graph("smart_home_2", "qwen3-0.6b", "train")
-    wl = workload_for("train")
+    topo, graph, wl = scenario_case("smart_home_2")
     qoe = QoESpec(t_qoe=math.inf, lam=1.0)
     res = dora_plan(graph, topo, qoe, wl, top_k=10)
     plans = res.pareto

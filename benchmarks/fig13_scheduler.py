@@ -12,14 +12,15 @@ from .common import Claim, table
 
 from repro.core.qoe import QoESpec
 from repro.core.scheduler import NetworkScheduler, SchedulerConfig
-from repro.sim.runner import dora_plan, setting_and_graph, workload_for
+from repro.sim.runner import dora_plan, scenario_case
 
 LAT = QoESpec(t_qoe=0.0, lam=1e15)
 
 
 def run(report) -> None:
-    topo, graph = setting_and_graph("traffic_monitor", "qwen3-0.6b", "train")
-    wl = workload_for("train")
+    # the traffic-monitor fleet, driven in training mode for this figure
+    topo, graph, wl = scenario_case("traffic_monitor", model="qwen3-0.6b",
+                                    mode="train")
     plan = dora_plan(graph, topo, LAT, wl).best
 
     # (a) utilization with/without Phase 2

@@ -10,8 +10,7 @@ from .common import Claim, table
 
 from repro.core.qoe import QoESpec
 from repro.sim import edgeshard_plan
-from repro.sim.runner import (dora_plan, execute_plan, setting_and_graph,
-                              workload_for)
+from repro.sim.runner import dora_plan, execute_plan, scenario_case
 
 LAT = QoESpec(t_qoe=0.0, lam=1e15)
 CASES = [("qwen-omni", "train"), ("qwen3-1.7b", "infer"),
@@ -22,8 +21,8 @@ def run(report) -> None:
     rows = []
     improvements = []
     for model, mode in CASES:
-        topo, graph = setting_and_graph("smart_home_2", model, mode)
-        wl = workload_for(mode)
+        topo, graph, wl = scenario_case("smart_home_2", model=model,
+                                        mode=mode)
         even = edgeshard_plan(graph, topo, wl)
 
         base = execute_plan(even, topo, LAT, scheduled=False).latency

@@ -12,12 +12,12 @@ from .common import Claim, table
 
 from repro.core.adapter import pareto_filter
 from repro.core.qoe import QoESpec
-from repro.sim.runner import dora_plan, setting_and_graph, workload_for
+from repro.sim.runner import dora_plan, scenario_case
 
 
 def run(report) -> None:
-    topo, graph = setting_and_graph("traffic_monitor", "qwen3-1.7b", "train")
-    wl = workload_for("train")
+    topo, graph, wl = scenario_case("traffic_monitor", model="qwen3-1.7b",
+                                    mode="train")
 
     # latency-optimal anchor to size λ and T_QoE
     fast = dora_plan(graph, topo, QoESpec(t_qoe=0.0, lam=1e15), wl).best

@@ -13,8 +13,7 @@ from repro.core.adapter import DynamicsEvent, RuntimeAdapter
 from repro.core.qoe import QoESpec
 from repro.core.scheduler import NetworkScheduler
 from repro.sim import asteroid_plan
-from repro.sim.runner import (dora_plan, execute_plan, setting_and_graph,
-                              workload_for)
+from repro.sim.runner import dora_plan, scenario_case
 
 LAT = QoESpec(t_qoe=0.0, lam=1e15)
 
@@ -29,8 +28,8 @@ PHASES = [
 
 
 def run(report) -> None:
-    topo, graph = setting_and_graph("smart_home_2", "qwen3-1.7b", "infer")
-    wl = workload_for("infer")
+    topo, graph, wl = scenario_case("smart_home_2", model="qwen3-1.7b",
+                                    mode="infer")
     sched = NetworkScheduler(topo, LAT)
 
     ast = asteroid_plan(graph, topo, wl)

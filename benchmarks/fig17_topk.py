@@ -5,14 +5,13 @@ from __future__ import annotations
 from .common import Claim, table
 
 from repro.core.qoe import QoESpec
-from repro.sim.runner import dora_plan, setting_and_graph, workload_for
+from repro.sim.runner import dora_plan, scenario_case
 
 LAT = QoESpec(t_qoe=0.0, lam=1e15)
 
 
 def run(report) -> None:
-    topo, graph = setting_and_graph("smart_home_2", "qwen3-0.6b", "train")
-    wl = workload_for("train")
+    topo, graph, wl = scenario_case("smart_home_2")
     rows, lats = [], {}
     for k in (1, 5, 10, 15):
         res = dora_plan(graph, topo, LAT, wl, top_k=k)

@@ -14,8 +14,7 @@ from repro.core.engine import EventEngine
 from repro.core.cep import build_cep, cep_resource_caps
 from repro.core.qoe import QoESpec
 from repro.sim import asteroid_plan, brute_force_optimal
-from repro.sim.runner import (dora_plan, execute_plan, setting_and_graph,
-                              workload_for)
+from repro.sim.runner import dora_plan, execute_plan, scenario_case
 
 LAT = QoESpec(t_qoe=0.0, lam=1e15)
 
@@ -41,8 +40,8 @@ def _d2d_latency(plan, topo):
 
 
 def run(report) -> None:
-    topo, graph = setting_and_graph("smart_home_2", "bert", "train")
-    wl = workload_for("train")
+    topo, graph, wl = scenario_case("smart_home_2", model="bert",
+                                    mode="train")
 
     ast = asteroid_plan(graph, topo, wl)
     d2d = _d2d_latency(ast, topo)

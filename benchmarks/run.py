@@ -16,6 +16,7 @@ from typing import Dict, List
 from .common import Claim
 
 HARNESSES = [
+    "scenario_sweep",
     "fig2_contention",
     "fig8_training",
     "fig9_inference",

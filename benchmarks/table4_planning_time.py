@@ -11,7 +11,7 @@ from .common import Claim, table
 from repro.core.partitioner import ModelPartitioner, PartitionerConfig
 from repro.core.qoe import QoESpec
 from repro.sim import asteroid_plan, metis_plan
-from repro.sim.runner import dora_plan, setting_and_graph, workload_for
+from repro.sim.runner import dora_plan, scenario_case
 
 LAT = QoESpec(t_qoe=0.0, lam=1e15)
 MODELS = ["bert", "qwen3-1.7b", "qwen-omni"]
@@ -23,8 +23,8 @@ def run(report) -> None:
     phase1_times, e2e_times = [], []
     for model in MODELS:
         for setting in SETTINGS:
-            topo, graph = setting_and_graph(setting, model, "train")
-            wl = workload_for("train")
+            topo, graph, wl = scenario_case(setting, model=model,
+                                            mode="train")
             t0 = time.perf_counter()
             metis_plan(graph, topo, wl)
             t_metis = time.perf_counter() - t0

@@ -21,13 +21,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import dora
 from repro.checkpoint import Checkpointer
 from repro.configs import reduced_config
 from repro.core.cost_model import Workload
 from repro.core.device import CATALOG, Topology
 from repro.core.graph_builders import GraphSpec, build_lm_graph
-from repro.core.planner import DoraPlanner
 from repro.core.qoe import QoESpec
+from repro.scenarios import Scenario
+from repro.launch.mesh import use_mesh
 from repro.launch.steps import make_train_step
 from repro.models.sharding import ShardingRules
 from repro.optim import adamw_init
@@ -62,7 +64,7 @@ def main() -> None:
     ckpt = Checkpointer(tempfile.mkdtemp(), async_save=False)
     mesh8 = make_mesh(8)
     print(f"training on {mesh8.devices.size} devices...")
-    with jax.set_mesh(mesh8):
+    with use_mesh(mesh8):
         params = model.init(jax.random.PRNGKey(0))
         opt = adamw_init(params)
         for step in range(4):
@@ -81,14 +83,20 @@ def main() -> None:
     print(f"\nheartbeat detector: devices {failed} FAILED "
           f"(healthy: {ctrl.coordinator.healthy})")
 
-    # Dora replans for the shrunk fleet (planner view of the same event)
+    # Dora replans for the shrunk fleet (planner view of the same event):
+    # an ad-hoc Scenario — the facade takes unregistered deployments too.
     devs = [CATALOG["rtx4050"]] * 4
-    topo = Topology.shared_medium(devs, 600.0)
     spec = GraphSpec("m", cfg.n_layers, cfg.d_model, cfg.n_heads,
                      cfg.n_kv_heads, cfg.d_ff, cfg.vocab_size, seq_len=16)
-    plan = DoraPlanner(build_lm_graph(spec), topo,
-                       QoESpec(t_qoe=1.0, lam=10.0)).plan(
-        Workload(global_batch=8, microbatch_size=1, optimizer_mult=3.0))
+    survivors = Scenario(
+        name="home_survivors",
+        description="Smart-home fleet after losing 4 of 8 devices",
+        topology=lambda: Topology.shared_medium(devs, 600.0),
+        model=lambda seq_len: build_lm_graph(spec, seq_len=seq_len),
+        workload=Workload(global_batch=8, microbatch_size=1,
+                          optimizer_mult=3.0),
+        qoe=QoESpec(t_qoe=1.0, lam=10.0), seq_len=16)
+    plan = dora.plan(survivors).result
     print(f"Dora replanned for 4 survivors in {plan.total_s:.2f}s: "
           f"{plan.best.n_stages} stages")
 
@@ -99,7 +107,7 @@ def main() -> None:
     print(f"restored step {state.step} onto a "
           f"{state.mesh.devices.size}-device mesh (generation "
           f"{state.generation})")
-    with jax.set_mesh(state.mesh):
+    with use_mesh(state.mesh):
         p, o, m = jit_step(state.params, state.opt_state,
                            batch(state.mesh, 99), jnp.asarray(5))
     print(f"training resumed: step 5 loss {float(m['loss']):.4f}")

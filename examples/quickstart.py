@@ -1,8 +1,10 @@
-"""Quickstart — QoE-aware planning in ~20 lines.
+"""Quickstart — QoE-aware planning in three lines.
 
 Plan Qwen3-0.6B training for a smart home (2 laptops + 3 phones on
 shared WiFi) under a latency target, inspect the chosen hybrid-parallel
 plan, and see the energy/latency frontier the runtime adapter can mix.
+Every deployment here is a named scenario from ``repro.scenarios``; run
+``python -m repro.scenarios --list`` to see them all.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,34 +13,19 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.cost_model import Workload
-from repro.core.device import make_setting
-from repro.core.graph_builders import paper_model
-from repro.core.planner import DoraPlanner
-from repro.core.qoe import QoESpec
+from repro import dora
 
 
 def main() -> None:
-    topo = make_setting("smart_home_2")           # Table 3 deployment
-    graph = paper_model("qwen3-0.6b", seq_len=512)
-    qoe = QoESpec(t_qoe=8.0, lam=50.0)            # ≤8 s/iteration; λ = 50 J/s
+    report = dora.plan("smart_home_2")            # Table 3 deployment
+    print(report.summary())
 
-    planner = DoraPlanner(graph, topo, qoe)
-    result = planner.plan(Workload(global_batch=32, microbatch_size=4,
-                                   optimizer_mult=3.0))
-
-    print(f"planning took {result.total_s:.2f}s "
-          f"(phase1 {result.phase1_s:.2f}s + phase2 {result.phase2_s:.2f}s)\n")
-    print("BEST PLAN:", result.best.summary(), "\n")
-    print("Pareto frontier (for runtime mixing):")
-    for p in result.pareto:
-        print(f"  lat={p.latency * 1e3:7.1f} ms  energy={p.energy:7.1f} J  "
-              f"stages={p.n_stages} mb={p.microbatch_size}")
-
-    meets = result.best.latency <= qoe.t_qoe
-    print(f"\nQoE target {qoe.t_qoe:.1f}s: "
-          f"{'MET' if meets else 'VIOLATED'} "
-          f"({result.best.latency:.2f}s, {result.best.energy:.0f} J/iter)")
+    # every knob stays reachable through overrides:
+    from repro.core.qoe import QoESpec
+    tight = dora.plan("smart_home_2", qoe=QoESpec(t_qoe=6.0, lam=200.0))
+    print(f"\nwith a 6 s target instead: latency {tight.latency:.2f}s, "
+          f"energy {tight.energy:.0f} J "
+          f"({'MET' if tight.meets_qoe else 'VIOLATED'})")
 
 
 if __name__ == "__main__":

@@ -22,15 +22,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import dora
 from repro.checkpoint import Checkpointer, latest_step
 from repro.configs import reduced_config
 from repro.core.cost_model import Workload
-from repro.core.device import make_setting
 from repro.core.graph_builders import GraphSpec, build_lm_graph
-from repro.core.planner import DoraPlanner
 from repro.core.qoe import QoESpec
 from repro.data import DataConfig, TokenPipeline
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, use_mesh
 from repro.launch.steps import make_train_step
 from repro.models.common import count_params
 from repro.optim import adamw_init
@@ -57,16 +56,18 @@ def main() -> None:
     args = ap.parse_args()
 
     # ---- 1. QoE-aware plan for the edge fleet -----------------------------
+    # the scenario supplies fleet + workload; we swap in the actual
+    # (reduced) model being trained and this run's QoE target.
     cfg = model_cfg(args.big)
     spec = GraphSpec("home-lm", cfg.n_layers, cfg.d_model, cfg.n_heads,
                      cfg.n_kv_heads, cfg.d_ff, cfg.vocab_size,
                      head_dim=cfg.head_dim, seq_len=args.seq)
-    topo = make_setting("smart_home_2")
-    planner = DoraPlanner(build_lm_graph(spec), topo,
-                          QoESpec(t_qoe=2.0, lam=10.0))
-    result = planner.plan(Workload(global_batch=32, microbatch_size=4,
-                                   optimizer_mult=3.0))
-    print("Dora plan for the fleet:", result.best.summary())
+    report = dora.plan("smart_home_2", graph=build_lm_graph(spec),
+                       qoe=QoESpec(t_qoe=2.0, lam=10.0),
+                       workload=Workload(global_batch=32, microbatch_size=4,
+                                         optimizer_mult=3.0))
+    result = report.result
+    print("Dora plan for the fleet:", report.best.summary())
     print(f"(planned in {result.total_s:.2f}s; executing the training loop "
           f"locally on {jax.device_count()} JAX device(s))\n")
 
@@ -75,7 +76,7 @@ def main() -> None:
     model, train_step = make_train_step(cfg, peak_lr=1e-3,
                                         warmup=max(args.steps // 20, 5),
                                         total=args.steps, remat="none")
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
         print(f"model: {count_params(params) / 1e6:.1f}M params")
         opt = adamw_init(params)

@@ -18,14 +18,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
+from repro import dora
 from repro.configs import reduced_config
-from repro.core.adapter import DynamicsEvent, RuntimeAdapter
-from repro.core.cost_model import Workload
-from repro.core.device import make_setting
-from repro.core.graph_builders import paper_model
-from repro.core.planner import DoraPlanner
-from repro.core.qoe import QoESpec
-from repro.core.scheduler import NetworkScheduler
+from repro.core.adapter import DynamicsEvent
 from repro.models import build_model
 
 TIMELINE = [
@@ -40,27 +35,12 @@ TIMELINE = [
 
 
 def main() -> None:
-    # ---- 1. plan inference for the fleet -----------------------------------
-    topo = make_setting("traffic_monitor")
-    graph = paper_model("qwen3-0.6b", seq_len=1)          # per-token serving
-    qoe = QoESpec(t_qoe=0.2, lam=100.0)                    # ≤200 ms per batch
-    planner = DoraPlanner(graph, topo, qoe)
-    result = planner.plan(Workload(global_batch=8, microbatch_size=1,
-                                   training=False))
-    print("serving plan:", result.best.summary())
-
-    # ---- 2. dynamics timeline ----------------------------------------------
-    sched = NetworkScheduler(topo, qoe)
-    adapter = RuntimeAdapter(result.candidates, topo, qoe, sched)
-    current = result.best
-    print(f"\nbaseline batch latency {current.latency * 1e3:.1f} ms")
-    for label, ev in TIMELINE:
-        current, action, react = adapter.on_dynamics(
-            current, ev, replan_fn=lambda: list(result.candidates))
-        print(f"{label:48s} -> {action:10s} "
-              f"({react * 1e3:.0f} ms) new latency "
-              f"{current.latency * 1e3:.1f} ms "
-              f"{'[QoE OK]' if current.latency <= qoe.t_qoe else '[QoE MISS]'}")
+    # ---- 1 + 2. plan inference, then replay the dynamics timeline ----------
+    # ``simulate`` = plan (partition → schedule) + runtime adapter armed
+    # over the Pareto set, reacting to each event.
+    trace = dora.simulate("traffic_monitor", events=TIMELINE)
+    print("serving plan:", trace.report.best.summary(), "\n")
+    print(trace.summary())
 
     # ---- 3. real batched decode on this host -------------------------------
     print("\nreal batched serving (reduced model, greedy decode):")

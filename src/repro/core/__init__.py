@@ -1,6 +1,8 @@
 """Dora core: QoE-aware hybrid parallelism planning (the paper's contribution).
 
-Public API:
+Most callers should go through the facade — ``repro.dora.plan(name)``
+resolves a registered deployment scenario and runs this whole stack in
+one call. The underlying API, for custom wiring:
 
     graph   = graph_builders.paper_model("qwen3-1.7b", seq_len=512)
     topo    = device.make_setting("smart_home_2")

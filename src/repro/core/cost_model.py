@@ -75,6 +75,16 @@ class Workload:
         return max(1, self.global_batch // self.microbatch_size)
 
 
+# The paper's §5 evaluation workloads — the single source of truth for
+# the scenario catalogue (repro.scenarios.catalog) and the benchmark
+# harnesses (repro.sim.runner.workload_for). Edge tuning keeps bf16
+# params + grads + momentum → 3× param bytes of tuning state.
+PAPER_TRAIN_WORKLOAD = Workload(global_batch=32, microbatch_size=4,
+                                training=True, optimizer_mult=3.0)
+PAPER_SERVE_WORKLOAD = Workload(global_batch=8, microbatch_size=1,
+                                training=False)
+
+
 class CostModel:
     def __init__(self, graph: ModelGraph, topo: Topology, workload: Workload):
         self.graph = graph

@@ -201,16 +201,28 @@ class EventEngine:
                 requeue = []
                 if progressed:
                     continue
-            # advance time to next completion
+            # advance time to next completion. Flows whose predicted
+            # finish is the horizon are completed BY TIME, not by a
+            # residual-byte check: on fast links (TPU ICI, multi-GbE) the
+            # final drain can leave a few µbytes of float-cancellation
+            # residue whose drain time rounds to zero ulps, pinning
+            # t_now forever if completion only looked at bytes.
             rates = comm_rates()
             next_t = math.inf
+            comm_finishers: List[str] = []
             if running_compute:
                 next_t = running_compute[0][0]
             for name, rem in active_comm.items():
                 r = rates[name]
                 if r > 0:
                     eff_start = max(ready_at.get(name, 0.0), t_now)
-                    next_t = min(next_t, eff_start + rem / r)
+                    f = eff_start + rem / r
+                    tol = EPS + 1e-12 * abs(next_t if next_t < math.inf else f)
+                    if f < next_t - tol:
+                        next_t = f
+                        comm_finishers = [name]
+                    elif f <= next_t + tol:
+                        comm_finishers.append(name)
             if next_t is math.inf:
                 stuck = [n for n, d in ndeps.items() if d > 0 or n not in finish]
                 raise RuntimeError(f"engine stalled at t={t_now}; pending={stuck[:5]}")
@@ -227,6 +239,11 @@ class EventEngine:
                 _, name = heapq.heappop(running_compute)
                 complete(name)
                 n_done += 1
+            for name in comm_finishers:
+                if name in active_comm:
+                    del active_comm[name]
+                    complete(name)
+                    n_done += 1
             for name in list(active_comm):
                 if active_comm[name] <= 1e-6:
                     del active_comm[name]

@@ -1,0 +1,272 @@
+"""``repro.dora`` — the one-call facade over Dora's planning stack.
+
+The three paper mechanisms (model partitioner §4.1, contention-aware
+network scheduler §4.2, runtime adapter §4.3) are wired behind three
+verbs, each taking a scenario name (or an ad-hoc
+:class:`repro.scenarios.Scenario`):
+
+    from repro import dora
+
+    report  = dora.plan("smart_home_2")          # -> PlanReport
+    session = dora.serve("traffic_monitor")      # -> ServeSession (adapter)
+    trace   = dora.simulate("vehicle_platoon")   # -> SimulationTrace
+
+``plan`` runs Algorithm 1 end to end (partition → schedule → Pareto
+filter); ``serve`` additionally arms the runtime adapter for dynamics;
+``simulate`` replays a timeline of :class:`DynamicsEvent`\\ s through the
+adapter and records every reaction.  Every knob of the underlying stack
+remains reachable through keyword overrides (``workload=``, ``qoe=``,
+``graph=``, ``topology=``, ``partitioner_config=``, ...), so the facade
+never forces a drop back down to hand-wiring ``DoraPlanner``.
+
+This module is deliberately jax-free: planning is analytic, so importing
+``repro.dora`` never initializes an accelerator backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from .core.adapter import AdapterConfig, DynamicsEvent, RuntimeAdapter
+from .core.cost_model import Workload
+from .core.device import Topology
+from .core.partitioner import PartitionerConfig
+from .core.planner import DoraPlanner, PlanningResult
+from .core.planning_graph import ModelGraph
+from .core.plans import ParallelismPlan
+from .core.qoe import QoESpec
+from .core.scheduler import SchedulerConfig
+from .scenarios import Scenario, get_scenario
+
+ScenarioRef = Union[str, Scenario]
+
+# (label, event) or bare event — both accepted by simulate().
+TimelineItem = Union[DynamicsEvent, Tuple[str, DynamicsEvent]]
+
+
+@dataclasses.dataclass
+class PlanReport:
+    """Everything ``dora.plan`` produced for one scenario, in one object."""
+
+    scenario: Scenario
+    topology: Topology
+    graph: ModelGraph
+    workload: Workload
+    qoe: QoESpec
+    result: PlanningResult
+
+    @property
+    def best(self) -> ParallelismPlan:
+        return self.result.best
+
+    @property
+    def candidates(self) -> List[ParallelismPlan]:
+        return self.result.candidates
+
+    @property
+    def pareto(self) -> List[ParallelismPlan]:
+        return self.result.pareto
+
+    @property
+    def latency(self) -> float:
+        return self.result.best.latency
+
+    @property
+    def energy(self) -> float:
+        return self.result.best.energy
+
+    @property
+    def meets_qoe(self) -> bool:
+        return self.result.best.latency <= self.qoe.t_qoe
+
+    @property
+    def planning_seconds(self) -> float:
+        return self.result.total_s
+
+    def summary(self) -> str:
+        lines = [
+            f"scenario {self.scenario.name} [{self.scenario.mode}] "
+            f"model={self.scenario.model_name} devices={self.topology.n}",
+            f"planned in {self.result.total_s:.2f}s "
+            f"(phase1 {self.result.phase1_s:.2f}s + "
+            f"phase2 {self.result.phase2_s:.2f}s)",
+            f"best: {self.best.summary()}",
+            f"QoE target {self.qoe.t_qoe:g}s: "
+            f"{'MET' if self.meets_qoe else 'VIOLATED'} "
+            f"({self.latency:.3f}s, {self.energy:.1f} J)",
+            f"pareto frontier ({len(self.pareto)} plans for runtime mixing):",
+        ]
+        for p in self.pareto:
+            lines.append(f"  lat={p.latency * 1e3:9.1f} ms  "
+                         f"energy={p.energy:9.1f} J  "
+                         f"stages={p.n_stages} mb={p.microbatch_size}")
+        return "\n".join(lines)
+
+
+def _resolve(scenario: ScenarioRef,
+             topology: Optional[Topology],
+             graph: Optional[ModelGraph],
+             workload: Optional[Workload],
+             qoe: Optional[QoESpec],
+             seq_len: Optional[int]
+             ) -> Tuple[Scenario, Topology, ModelGraph, Workload, QoESpec]:
+    sc = get_scenario(scenario)
+    topo = topology if topology is not None else sc.build_topology()
+    wl = workload if workload is not None else sc.workload
+    q = qoe if qoe is not None else sc.qoe
+    g = graph if graph is not None else sc.build_graph(seq_len=seq_len)
+    return sc, topo, g, wl, q
+
+
+def planner_for(scenario: ScenarioRef, *,
+                topology: Optional[Topology] = None,
+                graph: Optional[ModelGraph] = None,
+                workload: Optional[Workload] = None,
+                qoe: Optional[QoESpec] = None,
+                seq_len: Optional[int] = None,
+                partitioner_config: Optional[PartitionerConfig] = None,
+                scheduler_config: Optional[SchedulerConfig] = None,
+                adapter_config: Optional[AdapterConfig] = None
+                ) -> Tuple[DoraPlanner, Scenario, Workload]:
+    """Construct (planner, scenario, workload) without running it —
+    the escape hatch for callers that sweep planner configurations."""
+    sc, topo, g, wl, q = _resolve(scenario, topology, graph, workload, qoe,
+                                  seq_len)
+    planner = DoraPlanner(g, topo, q,
+                          partitioner_config=partitioner_config,
+                          scheduler_config=scheduler_config,
+                          adapter_config=adapter_config)
+    return planner, sc, wl
+
+
+def plan(scenario: ScenarioRef, **overrides) -> PlanReport:
+    """Run Algorithm 1 end to end for one scenario.
+
+    ``dora.plan("smart_home_2")`` plans the registered deployment as-is;
+    keyword overrides swap any ingredient (``workload=``, ``qoe=``,
+    ``graph=``, ``topology=``, ``seq_len=``, ``partitioner_config=``,
+    ``scheduler_config=``).
+    """
+    planner, sc, wl = planner_for(scenario, **overrides)
+    result = planner.plan(wl)
+    return PlanReport(scenario=sc, topology=planner.topo, graph=planner.graph,
+                      workload=wl, qoe=planner.qoe, result=result)
+
+
+@dataclasses.dataclass
+class ServeSession:
+    """A planned deployment with its runtime adapter armed (§4.3)."""
+
+    report: PlanReport
+    adapter: RuntimeAdapter
+    current: ParallelismPlan
+
+    def on_dynamics(self, event: DynamicsEvent,
+                    replan: bool = True) -> Tuple[ParallelismPlan, str, float]:
+        """Feed one runtime event to the adapter; track the active plan.
+
+        Returns (new plan, action taken, reaction seconds).  ``replan``
+        permits full replanning on large shifts; small fluctuations are
+        absorbed with network-only rescheduling either way.
+        """
+        replan_fn = (lambda: list(self.report.candidates)) if replan else None
+        new, action, react = self.adapter.on_dynamics(self.current, event,
+                                                      replan_fn=replan_fn)
+        self.current = new
+        return new, action, react
+
+    @property
+    def meets_qoe(self) -> bool:
+        return self.current.latency <= self.report.qoe.t_qoe
+
+
+def serve(scenario: ScenarioRef, **overrides) -> ServeSession:
+    """Plan a scenario and arm the runtime adapter over its Pareto set."""
+    planner, sc, wl = planner_for(scenario, **overrides)
+    result = planner.plan(wl)
+    report = PlanReport(scenario=sc, topology=planner.topo,
+                        graph=planner.graph, workload=wl, qoe=planner.qoe,
+                        result=result)
+    adapter = planner.make_adapter(result)
+    return ServeSession(report=report, adapter=adapter, current=result.best)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimulationStep:
+    t: float
+    label: str
+    action: str                 # "reschedule" | "replan"
+    react_seconds: float
+    latency: float
+    qoe_ok: bool
+
+
+@dataclasses.dataclass
+class SimulationTrace:
+    report: PlanReport
+    steps: List[SimulationStep]
+
+    @property
+    def qoe_violations(self) -> int:
+        return sum(1 for s in self.steps if not s.qoe_ok)
+
+    def summary(self) -> str:
+        lines = [f"baseline latency {self.report.latency * 1e3:.1f} ms "
+                 f"(QoE target {self.report.qoe.t_qoe:g}s)"]
+        for s in self.steps:
+            lines.append(
+                f"t={s.t:6.1f}s  {s.label:52s} -> {s.action:10s} "
+                f"({s.react_seconds * 1e3:.0f} ms) latency "
+                f"{s.latency * 1e3:8.1f} ms "
+                f"{'[QoE OK]' if s.qoe_ok else '[QoE MISS]'}")
+        lines.append(f"{len(self.steps)} events, "
+                     f"{self.qoe_violations} QoE violations")
+        return "\n".join(lines)
+
+
+def simulate(scenario: ScenarioRef,
+             events: Optional[Sequence[TimelineItem]] = None,
+             session: Optional[ServeSession] = None,
+             **overrides) -> SimulationTrace:
+    """Replay a dynamics timeline through the runtime adapter.
+
+    ``events`` defaults to the scenario's registered timeline; each item
+    is a ``DynamicsEvent`` or a ``(label, event)`` pair.  Every event's
+    adapter reaction (reschedule vs replan, reaction time, post-event
+    latency) is recorded in the returned trace.  Pass an existing
+    ``session`` (from ``dora.serve`` of the *same* scenario) to reuse
+    its plan instead of re-running the planner.
+    """
+    if session is None:
+        session = serve(scenario, **overrides)
+    else:
+        want = get_scenario(scenario).name
+        have = session.report.scenario.name
+        if want != have:
+            raise ValueError(f"session was served for scenario {have!r}, "
+                             f"not {want!r}")
+        if overrides:
+            raise ValueError("overrides are ignored when reusing a session; "
+                             "pass them to dora.serve instead")
+    timeline: List[Tuple[str, DynamicsEvent]] = []
+    source: Sequence[TimelineItem] = (
+        events if events is not None else session.report.scenario.timeline)
+    for item in source:
+        if isinstance(item, DynamicsEvent):
+            timeline.append((f"event@t={item.t:g}s", item))
+        else:
+            label, ev = item
+            timeline.append((label, ev))
+    steps: List[SimulationStep] = []
+    for label, ev in sorted(timeline, key=lambda kv: kv[1].t):
+        new, action, react = session.on_dynamics(ev)
+        steps.append(SimulationStep(t=ev.t, label=label, action=action,
+                                    react_seconds=react, latency=new.latency,
+                                    qoe_ok=session.meets_qoe))
+    return SimulationTrace(report=session.report, steps=steps)
+
+
+__all__ = [
+    "PlanReport", "ServeSession", "SimulationStep", "SimulationTrace",
+    "plan", "planner_for", "serve", "simulate",
+]

@@ -1,0 +1,13 @@
+"""Pallas version compatibility shared by all kernels."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax 0.4.x names it TPUCompilerParams; ≥0.5 renamed it CompilerParams
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams", None)
+if CompilerParams is None:  # pragma: no cover - future jax renames
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; update src/repro/kernels/_compat.py for this "
+        "jax version")

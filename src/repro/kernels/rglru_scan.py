@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams as _CompilerParams
+
 
 def _rglru_kernel(alog_ref, b_ref, h_ref, hlast_ref, state_scr, *,
                   block_t: int, n_tblocks: int):
@@ -86,7 +88,7 @@ def rglru_scan(a_log: jnp.ndarray, b: jnp.ndarray, *, block_t: int = 256,
             jax.ShapeDtypeStruct((B, W), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a_log, b)

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams as _CompilerParams
+
 
 def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, hfin_ref, state_scr, *,
                 chunk: int, n_chunks: int):
@@ -103,7 +105,7 @@ def ssd_scan(x: jnp.ndarray, a_log: jnp.ndarray, b: jnp.ndarray,
             jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, a_log, b, c)

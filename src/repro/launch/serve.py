@@ -14,11 +14,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import dora
 from ..configs import get_config, reduced_config
-from ..core import (DoraPlanner, DynamicsEvent, QoESpec, Workload,
-                    make_setting)
+from ..core import DynamicsEvent, QoESpec, Workload
 from ..models.registry import planning_graph
-from .mesh import make_host_mesh
+from .mesh import make_host_mesh, use_mesh
 from .steps import make_prefill_step, make_serve_step
 
 
@@ -37,22 +37,24 @@ def main() -> None:
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
 
     # --- Dora plans the edge deployment for this model --------------------
-    topo = make_setting(args.setting)
-    qoe = QoESpec(t_qoe=args.t_qoe_ms / 1e3, lam=100.0)
-    planner = DoraPlanner(planning_graph(cfg, args.prompt_len), topo, qoe)
-    result = planner.plan(Workload(global_batch=args.batch, microbatch_size=1,
-                                   training=False))
+    # scenario fleet + this invocation's model/batch/QoE via overrides
+    session = dora.serve(
+        args.setting, graph=planning_graph(cfg, args.prompt_len),
+        qoe=QoESpec(t_qoe=args.t_qoe_ms / 1e3, lam=100.0),
+        workload=Workload(global_batch=args.batch, microbatch_size=1,
+                          training=False))
+    result = session.report.result
+    adapter = session.adapter
     print("Dora plan:", result.best.summary())
     print(f"planning took {result.total_s*1e3:.0f}ms "
           f"(phase1 {result.phase1_s*1e3:.0f}ms, phase2 {result.phase2_s*1e3:.0f}ms)")
-    adapter = planner.make_adapter(result)
 
     # --- local JAX execution of the serving loop ---------------------------
     mesh = make_host_mesh()
     model, prefill_step = make_prefill_step(cfg)
     _, serve_step = make_serve_step(cfg)
     max_len = args.prompt_len + args.gen_len
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
         cache = model.init_cache(args.batch, max_len)
         rng = np.random.default_rng(0)

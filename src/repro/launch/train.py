@@ -19,7 +19,7 @@ from ..checkpoint import Checkpointer, latest_step
 from ..configs import get_config, reduced_config
 from ..data import DataConfig, TokenPipeline
 from ..optim import adamw_init
-from .mesh import make_host_mesh
+from .mesh import make_host_mesh, use_mesh
 from .steps import make_train_step
 
 
@@ -43,7 +43,7 @@ def main() -> None:
     model, train_step = make_train_step(cfg, peak_lr=args.lr,
                                         warmup=max(args.steps // 20, 5),
                                         total=args.steps, remat="none")
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = model.init(jax.random.PRNGKey(args.seed))
         opt = adamw_init(params)
         step0 = 0

@@ -99,11 +99,18 @@ class DoraPipelineExecutor:
         S, M = spec.n_stages, spec.n_microbatches
         n_valid = jnp.asarray(spec.layers_per_stage)
 
+        # jax ≥0.7 calls the replication check ``check_vma``; older jax
+        # calls it ``check_rep`` — disable whichever this jax has.
+        import inspect
+        check_kw = ("check_vma" if "check_vma"
+                    in inspect.signature(shard_map).parameters
+                    else "check_rep")
+
         @functools.partial(
             shard_map, mesh=self.mesh,
             in_specs=(P("stage"), P(None)),
             out_specs=P(None),
-            check_vma=False)
+            **{check_kw: False})
         def run(params, xs):
             params = jax.tree.map(lambda a: a[0], params)   # local stage block
             stage_id = jax.lax.axis_index("stage")

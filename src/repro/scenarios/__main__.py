@@ -1,0 +1,82 @@
+"""Scenario sweep CLI.
+
+    PYTHONPATH=src python -m repro.scenarios --list
+    PYTHONPATH=src python -m repro.scenarios --run smart_home_2
+    PYTHONPATH=src python -m repro.scenarios --run all [--simulate]
+
+``--list`` prints the registry; ``--run`` plans the named scenario(s)
+through the ``repro.dora`` facade and prints each PlanReport;
+``--simulate`` additionally replays each scenario's registered dynamics
+timeline through the runtime adapter.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+from .. import dora
+from . import get_scenario, iter_scenarios, list_scenarios
+
+
+def _print_listing(tag: str = None) -> None:
+    rows = [s.summary_row() for s in iter_scenarios(tag)]
+    headers = ("name", "mode", "model", "devs", "t_qoe", "description")
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(headers)]
+    print("  ".join(h.ljust(w) for h, w in zip(headers, widths)))
+    print("  ".join("-" * w for w in widths))
+    for r in rows:
+        print("  ".join(v.ljust(w) for v, w in zip(r, widths)))
+    print(f"\n{len(rows)} scenarios registered")
+
+
+def _run(names: List[str], simulate: bool) -> int:
+    failures = 0
+    for name in names:
+        try:
+            sc = get_scenario(name)
+        except KeyError as e:
+            print(f"error: {e.args[0]}", file=sys.stderr)
+            failures += 1
+            continue
+        print(f"\n===== {name} " + "=" * max(0, 60 - len(name)))
+        try:
+            session = dora.serve(sc)
+        except Exception as e:  # noqa: BLE001 — keep sweeping on failure
+            print(f"[ERROR] planning failed: {type(e).__name__}: {e}")
+            failures += 1
+            continue
+        print(session.report.summary())
+        if simulate and sc.timeline:
+            print("\ndynamics timeline:")
+            print(dora.simulate(sc, session=session).summary())
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.scenarios",
+        description="List or sweep Dora's registered deployment scenarios.")
+    ap.add_argument("--list", action="store_true",
+                    help="print the scenario registry and exit")
+    ap.add_argument("--run", nargs="+", metavar="NAME",
+                    help="plan the named scenario(s); 'all' sweeps the "
+                         "whole registry")
+    ap.add_argument("--tag", default=None,
+                    help="filter --list/--run all by tag (e.g. paper, serve)")
+    ap.add_argument("--simulate", action="store_true",
+                    help="with --run: also replay each scenario's dynamics "
+                         "timeline through the runtime adapter")
+    args = ap.parse_args(argv)
+
+    if args.list or not args.run:
+        _print_listing(args.tag)
+        return 0
+    names = (list_scenarios(args.tag) if args.run == ["all"]
+             else list(args.run))
+    return _run(names, args.simulate)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

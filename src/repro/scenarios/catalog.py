@@ -1,0 +1,199 @@
+"""Built-in scenario catalogue.
+
+The four Table-3 settings of the paper plus new deployments that stress
+different corners of the QoE space (tight serving latency, per-device
+energy budgets, lossy vehicle links, TPU-pod planning).  Device profiles
+come from ``core.device.CATALOG``; degraded fleets are derived with
+``dataclasses.replace`` so the catalogue stays the single source of
+hardware truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.adapter import DynamicsEvent
+from ..core.cost_model import PAPER_SERVE_WORKLOAD, PAPER_TRAIN_WORKLOAD
+from ..core.device import CATALOG, MBPS, LinkResource, Topology, make_setting
+from ..core.qoe import QoESpec
+from . import Scenario, register
+
+# Default paper-style workloads, shared with sim.runner.workload_for.
+TRAIN_WL = PAPER_TRAIN_WORKLOAD
+SERVE_WL = PAPER_SERVE_WORKLOAD
+
+
+# -- the paper's Table-3 settings ----------------------------------------------
+register(Scenario(
+    name="smart_home_1",
+    description="Paper Table 3: well-provisioned smart home — 2 gaming "
+                "laptops + 3 mini-PC dGPUs on 900 Mbps WiFi, fine-tuning.",
+    topology=lambda: make_setting("smart_home_1"),
+    model="qwen3-0.6b", workload=TRAIN_WL,
+    qoe=QoESpec(t_qoe=6.0, lam=50.0),
+    tags=("paper", "train"),
+))
+
+register(Scenario(
+    name="smart_home_2",
+    description="Paper Table 3: mixed smart home — 2 laptop dGPUs + 3 "
+                "phones on 600 Mbps WiFi, fine-tuning under a latency "
+                "target.",
+    topology=lambda: make_setting("smart_home_2"),
+    model="qwen3-0.6b", workload=TRAIN_WL,
+    qoe=QoESpec(t_qoe=8.0, lam=50.0),
+    tags=("paper", "train"),
+))
+
+register(Scenario(
+    name="traffic_monitor",
+    description="Paper Table 3: roadside camera fleet — 4 Genio boards "
+                "on a wired ring + shared WiFi, per-token serving.",
+    topology=lambda: make_setting("traffic_monitor"),
+    model="qwen3-0.6b", workload=SERVE_WL,
+    qoe=QoESpec(t_qoe=0.2, lam=100.0),
+    tags=("paper", "serve"),
+))
+
+register(Scenario(
+    name="edge_cluster",
+    description="Paper Table 3: small edge cluster — 2×A40 + 2×V100 on a "
+                "4 Gbps wired LAN ring, fine-tuning a larger model.",
+    topology=lambda: make_setting("edge_cluster"),
+    model="qwen3-1.7b", workload=TRAIN_WL,
+    qoe=QoESpec(t_qoe=2.0, lam=50.0),
+    tags=("paper", "train"),
+))
+
+
+# -- new deployments ------------------------------------------------------------
+def _retail_topology() -> Topology:
+    """RTX back-office server + two camera-hub Genio boards + one shelf
+    gateway. Everyone is on store WiFi; the server additionally has
+    dedicated ethernet to the camera hubs. The server is device 0 (the
+    partitioner's DP grows plans over device prefixes)."""
+    c = CATALOG
+    devs = [c["rtx4060"], c["genio720"], c["genio720"], c["genio520"]]
+    wifi = LinkResource("wifi", 600.0 * MBPS, frozenset(range(4)),
+                        shared=True, latency=3e-3)
+    eth = [LinkResource(f"eth-0-{i}", 1000.0 * MBPS, frozenset((0, i)),
+                        shared=False, latency=0.3e-3) for i in (1, 2)]
+    p2p = {}
+    for i in (1, 2):
+        p2p[(0, i)] = [f"eth-0-{i}"]
+        p2p[(i, 0)] = [f"eth-0-{i}"]
+    return Topology.mixed(devs, [wifi] + eth, p2p)
+
+
+register(Scenario(
+    name="retail_analytics",
+    description="Retail-camera analytics: 2 camera hubs + shelf gateway "
+                "on store WiFi, RTX back-office server on ethernet; "
+                "serving shopper-flow queries.",
+    topology=_retail_topology,
+    model="qwen3-0.6b", workload=SERVE_WL,
+    qoe=QoESpec(t_qoe=0.25, lam=100.0),
+    tags=("serve", "mixed-network"),
+    timeline=(
+        ("checkout rush saturates store WiFi (-60%)",
+         DynamicsEvent(t=30.0, bandwidth_scale={"wifi": 0.4})),
+        ("rush clears",
+         DynamicsEvent(t=120.0, bandwidth_scale={"wifi": 1.0})),
+    ),
+))
+
+
+def _hospital_topology() -> Topology:
+    """Bedside tablets + two ward gateways on hospital WiFi (data must
+    stay on-prem, so the fleet is all there is)."""
+    c = CATALOG
+    devs = [c["s25"], c["s25"], c["s25"], c["s25"],
+            c["genio720"], c["genio720"]]
+    return Topology.shared_medium(devs, 300.0, latency=4e-3)
+
+
+register(Scenario(
+    name="hospital_ward",
+    description="Hospital ward monitoring: 4 bedside tablets + 2 "
+                "gateways on 300 Mbps WiFi; on-prem serving with a "
+                "strict alarm-latency target.",
+    topology=_hospital_topology,
+    model="qwen3-0.6b", workload=SERVE_WL,
+    qoe=QoESpec(t_qoe=0.3, e_qoe=5.0, lam=200.0),
+    tags=("serve", "energy-budget"),
+))
+
+
+def _platoon_topology() -> Topology:
+    """Four vehicles in convoy: V2V side links form a ring; hops are
+    slow (100 Mbps) and high-latency (5 ms MAC/retry budget)."""
+    devs = [CATALOG["genio520"]] * 4
+    return Topology.ring(devs, 100.0, name="v2v", latency=5e-3)
+
+
+register(Scenario(
+    name="vehicle_platoon",
+    description="Vehicle platoon: 4 in-car Genio boards over lossy "
+                "100 Mbps V2V links; cooperative perception serving.",
+    topology=_platoon_topology,
+    model="bert", workload=SERVE_WL,
+    qoe=QoESpec(t_qoe=0.25, lam=100.0),
+    tags=("serve", "lossy-network"),
+    timeline=(
+        ("overtaking truck shadows V2V links (-50%)",
+         DynamicsEvent(t=15.0, bandwidth_scale={
+             "v2v-0-1": 0.5, "v2v-1-2": 0.5, "v2v-2-3": 0.5,
+             "v2v-3-0": 0.5})),
+        ("truck passes",
+         DynamicsEvent(t=45.0, bandwidth_scale={
+             "v2v-0-1": 1.0, "v2v-1-2": 1.0, "v2v-2-3": 1.0,
+             "v2v-3-0": 1.0})),
+    ),
+))
+
+
+def _degraded_home_topology() -> Topology:
+    """Smart Home 2's fleet with the phones on battery saver: thermal +
+    battery governors cap sustained compute at ~60% of peak."""
+    c = CATALOG
+    throttle = lambda d: dataclasses.replace(d, flops=d.flops * 0.6)
+    devs = [c["rtx4050"], c["rtx4050"],
+            throttle(c["mi15"]), throttle(c["mi15"]), throttle(c["s25"])]
+    return Topology.shared_medium(devs, 600.0)
+
+
+register(Scenario(
+    name="smart_home_degraded",
+    description="Battery-degraded smart home: Smart Home 2 with phones "
+                "throttled to 60% and a hard per-device energy budget; "
+                "overnight fine-tuning.",
+    topology=_degraded_home_topology,
+    model="qwen3-0.6b", workload=TRAIN_WL,
+    qoe=QoESpec(t_qoe=12.0, e_qoe=150.0, lam=20.0, deadline=8 * 3600.0),
+    tags=("train", "energy-budget"),
+    timeline=(
+        ("phone 4 hits battery saver (compute -50%)",
+         DynamicsEvent(t=60.0, compute_speed={4: 0.5})),
+        ("4K stream on home WiFi (-40%)",
+         DynamicsEvent(t=180.0, bandwidth_scale={"wifi": 0.6})),
+        ("stream ends",
+         DynamicsEvent(t=600.0, bandwidth_scale={"wifi": 1.0})),
+    ),
+))
+
+
+def _v5e_pod_topology() -> Topology:
+    """A 4-chip TPU v5e ring for pod-level planning (the hardware
+    target of the jax_pallas substrate): ICI-class 50 GB/s links."""
+    devs = [CATALOG["v5e"]] * 4
+    return Topology.ring(devs, 400000.0, name="ici", latency=0.05e-3)
+
+
+register(Scenario(
+    name="edge_pod_v5e",
+    description="TPU v5e pod slice: 4 chips on ICI-class links; Dora "
+                "plans the same graph it partitions for edge fleets.",
+    topology=_v5e_pod_topology,
+    model="qwen3-1.7b", workload=TRAIN_WL,
+    qoe=QoESpec(t_qoe=0.8, lam=50.0),
+    tags=("train", "pod"),
+))

@@ -1,17 +1,19 @@
 """Edge-deployment simulator + baseline planners.
 
-Validates the paper's claims without edge hardware: the four Table-3
-settings (``core.device.make_setting``), the discrete-event engine
-(``core.engine``), Asteroid-/EdgeShard-/Alpa-/Metis-like baselines, and
-a brute-force optimal searcher for small device counts.
+Validates the paper's claims without edge hardware: the registered
+deployment scenarios (``repro.scenarios`` — Table-3 settings and
+beyond), the discrete-event engine (``core.engine``),
+Asteroid-/EdgeShard-/Alpa-/Metis-like baselines, and a brute-force
+optimal searcher for small device counts.
 """
 from .baselines import (BaselineError, alpa_plan, asteroid_plan,
                         brute_force_optimal, edgeshard_plan, metis_plan)
 from .runner import (ExecResult, compare_planners, dora_plan, execute_plan,
-                     workload_for)
+                     scenario_case, setting_and_graph, workload_for)
 
 __all__ = [
     "BaselineError", "alpa_plan", "asteroid_plan", "brute_force_optimal",
     "edgeshard_plan", "metis_plan", "ExecResult", "compare_planners",
-    "dora_plan", "execute_plan", "workload_for",
+    "dora_plan", "execute_plan", "scenario_case", "setting_and_graph",
+    "workload_for",
 ]

@@ -12,17 +12,18 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.adapter import AdapterConfig
 from ..core.cost_model import Workload
-from ..core.device import Topology, make_setting
+from ..core.device import Topology
 from ..core.graph_builders import paper_model
 from ..core.planner import DoraPlanner, PlanningResult
 from ..core.planning_graph import ModelGraph
 from ..core.plans import ParallelismPlan
 from ..core.qoe import QoESpec
 from ..core.scheduler import NetworkScheduler, SchedulerConfig
+from ..scenarios import PAPER_SETTINGS, get_scenario
 from .baselines import (BaselineError, alpa_plan, asteroid_plan,
                         edgeshard_plan, metis_plan)
 
-SETTINGS = ("smart_home_1", "smart_home_2", "traffic_monitor", "edge_cluster")
+SETTINGS = PAPER_SETTINGS
 PAPER_MODELS = ("bert", "qwen3-0.6b", "qwen3-1.7b", "qwen-omni")
 
 
@@ -44,15 +45,20 @@ def workload_for(mode: str, global_batch: int = 32,
                  microbatch: int = 4) -> Workload:
     """Paper-style workloads: training iterations vs inference forwards.
 
-    Edge tuning state is bf16 params + grads + momentum (3× param bytes):
-    a 6B Qwen-Omni cannot hold fp32 Adam m/v on phones/laptops, and §5's
-    prototype fine-tunes with DDP/PiPPy-style bf16 state.
+    Derived from the canonical ``core.cost_model.PAPER_*_WORKLOAD``
+    constants (also used by the scenario catalogue), so scenario-default
+    and mode-override sweeps stay comparable. Edge tuning state is bf16
+    params + grads + momentum (3× param bytes): a 6B Qwen-Omni cannot
+    hold fp32 Adam m/v on phones/laptops, and §5's prototype fine-tunes
+    with DDP/PiPPy-style bf16 state.
     """
+    from ..core.cost_model import PAPER_SERVE_WORKLOAD, PAPER_TRAIN_WORKLOAD
     if mode == "train":
-        return Workload(global_batch=global_batch, microbatch_size=microbatch,
-                        training=True, optimizer_mult=3.0)
-    return Workload(global_batch=max(global_batch // 4, 4),
-                    microbatch_size=1, training=False)
+        return dataclasses.replace(PAPER_TRAIN_WORKLOAD,
+                                   global_batch=global_batch,
+                                   microbatch_size=microbatch)
+    return dataclasses.replace(PAPER_SERVE_WORKLOAD,
+                               global_batch=max(global_batch // 4, 4))
 
 
 def execute_plan(plan: ParallelismPlan, topo: Topology, qoe: QoESpec,
@@ -138,8 +144,57 @@ def best_baseline(results: Dict[str, ExecResult]) -> Tuple[str, ExecResult]:
     return name, ok[name]
 
 
-def setting_and_graph(setting: str, model: str, mode: str,
-                      seq_len: int = 512) -> Tuple[Topology, ModelGraph]:
-    topo = make_setting(setting)
-    graph = paper_model(model, seq_len=seq_len if mode == "train" else 1)
+def _norm_mode(mode: str) -> str:
+    """Benchmarks say "infer"; Scenario.mode says "serve" — same thing."""
+    if mode in ("infer", "serve"):
+        return "serve"
+    if mode == "train":
+        return "train"
+    raise ValueError(f"unknown mode {mode!r}: expected 'train', 'serve' "
+                     f"or 'infer'")
+
+
+def scenario_case(setting: str, model: Optional[str] = None,
+                  mode: Optional[str] = None, seq_len: Optional[int] = None
+                  ) -> Tuple[Topology, ModelGraph, Workload]:
+    """(topology, graph, workload) for one registered scenario.
+
+    The scenario supplies all three by default; ``model``/``mode``/
+    ``seq_len`` override its model, train-vs-serve direction or
+    sequence length for paper-style sweeps (the workload geometry
+    then comes from ``workload_for``).
+    """
+    sc = get_scenario(setting)
+    mode = _norm_mode(mode) if mode is not None else sc.mode
+    topo, graph = setting_and_graph(setting, model, mode, seq_len)
+    wl = sc.workload if mode == sc.mode else (
+        workload_for("train" if mode == "train" else "infer"))
+    return topo, graph, wl
+
+
+def setting_and_graph(setting: str, model: Optional[str] = None,
+                      mode: str = "train", seq_len: Optional[int] = None
+                      ) -> Tuple[Topology, ModelGraph]:
+    """Resolve a scenario name to (topology, planning graph).
+
+    ``setting`` is any name in the ``repro.scenarios`` registry (the
+    paper's Table-3 settings included). ``model`` overrides the
+    scenario's own model with a paper-model name, which is how the
+    Fig. 8/9 harnesses sweep models × settings over one fleet.
+    ``seq_len`` defaults to the scenario's own sequence length
+    (paper-model overrides keep the historical 512).
+    """
+    sc = get_scenario(setting)
+    mode = _norm_mode(mode)
+    topo = sc.build_topology()
+    if seq_len is not None:
+        eff_seq = seq_len                            # explicit always wins
+    elif mode != "train":
+        eff_seq = 1                                  # per-token serving
+    else:
+        eff_seq = sc.seq_len if model is None else 512
+    if model is None:
+        graph = sc.build_graph(seq_len=eff_seq)
+    else:
+        graph = paper_model(model, seq_len=eff_seq)
     return topo, graph

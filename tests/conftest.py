@@ -4,6 +4,8 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# tests/ itself, so modules can import helpers._hypothesis_compat
+sys.path.insert(0, os.path.dirname(__file__))
 
 import pytest  # noqa: E402
 

@@ -1,0 +1,3 @@
+# Makes tests/helpers importable from test modules (conftest.py puts the
+# tests/ directory on sys.path). The check scripts in here are also run
+# directly as subprocesses by test_distributed_integration.py.

@@ -1,0 +1,106 @@
+"""Property-testing compat layer: real ``hypothesis`` when installed,
+otherwise a tiny deterministic stand-in.
+
+The container image this repo targets does not ship ``hypothesis``, and
+an unconditional ``import hypothesis`` breaks *collection* of five test
+modules (every other test in them is lost too).  Test modules therefore
+import ``given``/``settings``/``st`` from here:
+
+    from helpers._hypothesis_compat import given, settings, st
+
+When hypothesis is available it is re-exported unchanged (full
+shrinking, example database, etc.).  When it is missing, the stand-in
+runs each property test over ``max_examples`` pseudo-random examples
+from a fixed seed — deterministic across runs, no shrinking, but the
+invariants still get exercised instead of the module erroring out.
+
+Only the strategy surface this repo uses is implemented: ``integers``,
+``floats``, ``booleans``, ``sampled_from``, ``tuples``, ``lists``.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _SEED = 0xD0AA            # fixed: failures must reproduce run-to-run
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _StrategyNamespace:
+        """Mirror of ``hypothesis.strategies`` for the subset we use."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 31):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.example(rng) for s in strategies))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _StrategyNamespace()
+
+    def settings(*, max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Accepts (and mostly ignores) hypothesis.settings kwargs."""
+        def decorate(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return decorate
+
+    def given(*strategies):
+        def decorate(fn):
+            # No functools.wraps: it would set __wrapped__ and pytest
+            # would then see the original signature and treat the
+            # strategy-supplied parameters as fixture requests.
+            def wrapper():
+                n = getattr(fn, "_compat_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(_SEED)
+                for i in range(n):
+                    example = tuple(s.example(rng) for s in strategies)
+                    try:
+                        fn(*example)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"property falsified on example {i}: "
+                            f"{example!r}") from e
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return decorate
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -1,9 +1,8 @@
 """Phase-3 runtime adapter: Pareto filter, horizon LP, dynamics paths."""
 import math
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from helpers._hypothesis_compat import given, settings, st
 
 from repro.core.adapter import (AdapterConfig, DynamicsEvent, RuntimeAdapter,
                                 pareto_filter)

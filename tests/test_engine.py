@@ -1,7 +1,6 @@
 """Discrete-event engine correctness (unit + property tests)."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from helpers._hypothesis_compat import given, settings, st
 
 from repro.core.engine import EventEngine, Task, chunk_comm_tasks
 

@@ -2,12 +2,11 @@
 scatter/gather path)."""
 import dataclasses
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from helpers._hypothesis_compat import given, settings, st
 
 from repro.configs import reduced_config
 from repro.models.mlp import apply_moe, dispatch_groups, init_moe, moe_capacity

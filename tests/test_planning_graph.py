@@ -1,7 +1,6 @@
 """Planning-graph invariants (unit + hypothesis property tests)."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from helpers._hypothesis_compat import given, settings, st
 
 from repro.core.graph_builders import GraphSpec, build_lm_graph, paper_model
 from repro.core.planning_graph import LayerNode, ModelGraph

@@ -1,7 +1,6 @@
 """Pipeline-latency estimators + paper Appendix Algorithm 2."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from helpers._hypothesis_compat import given, settings, st
 
 from repro.core import profiler
 

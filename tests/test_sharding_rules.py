@@ -8,15 +8,16 @@ the static half of what the 512-device dry-run proves dynamically.
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.models import build_model
 from repro.models.sharding import ShardingRules
+from repro.models.sharding_utils import abstract_mesh
 
 MESHES = {
-    "16x16": AbstractMesh((16, 16), ("data", "model")),
-    "2x16x16": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+    "16x16": abstract_mesh((16, 16), ("data", "model")),
+    "2x16x16": abstract_mesh((2, 16, 16), ("pod", "data", "model")),
 }
 
 

@@ -91,11 +91,15 @@ def test_greedy_decode_runs():
 
 def test_dryrun_module_importable_without_devices():
     """Importing launch modules must not lock jax device state."""
+    import os
     code = ("import jax; "
             "from repro.launch import mesh; "
             "assert len(jax.devices()) == 1, jax.devices()")
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    # keep the ambient backend selection: without it jax probes for
+    # accelerator runtimes (TPU libtpu discovery), which takes minutes
+    if "JAX_PLATFORMS" in os.environ:
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
     res = subprocess.run([sys.executable, "-c", code],
-                         capture_output=True, text=True,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                         cwd=".")
+                         capture_output=True, text=True, env=env, cwd=".")
     assert res.returncode == 0, res.stderr
