@@ -9,8 +9,8 @@ from __future__ import annotations
 from .common import Claim, table
 
 from repro.core.qoe import QoESpec
-from repro.sim import edgeshard_plan
 from repro.sim.runner import dora_plan, execute_plan, scenario_case
+from repro.strategies import get_strategy
 
 LAT = QoESpec(t_qoe=0.0, lam=1e15)
 CASES = [("qwen-omni", "train"), ("qwen3-1.7b", "infer"),
@@ -23,9 +23,11 @@ def run(report) -> None:
     for model, mode in CASES:
         topo, graph, wl = scenario_case("smart_home_2", model=model,
                                         mode=mode)
-        even = edgeshard_plan(graph, topo, wl)
+        # registry-resolved even split, already priced under fluid sharing
+        even_res = get_strategy("edgeshard").plan(graph, topo, LAT, wl)
+        even = even_res.best
 
-        base = execute_plan(even, topo, LAT, scheduled=False).latency
+        base = even.latency
         p2_only = execute_plan(even, topo, LAT, scheduled=True).latency
         full_res = dora_plan(graph, topo, LAT, wl)
         full = full_res.best.latency

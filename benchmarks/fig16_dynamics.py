@@ -12,8 +12,8 @@ from .common import Claim, table
 from repro.core.adapter import DynamicsEvent, RuntimeAdapter
 from repro.core.qoe import QoESpec
 from repro.core.scheduler import NetworkScheduler
-from repro.sim import asteroid_plan
 from repro.sim.runner import dora_plan, scenario_case
+from repro.strategies import get_strategy
 
 LAT = QoESpec(t_qoe=0.0, lam=1e15)
 
@@ -32,7 +32,7 @@ def run(report) -> None:
                                     mode="infer")
     sched = NetworkScheduler(topo, LAT)
 
-    ast = asteroid_plan(graph, topo, wl)
+    ast = get_strategy("asteroid").plan(graph, topo, LAT, wl).best
     res = dora_plan(graph, topo, LAT, wl)
     adapter = RuntimeAdapter(res.candidates, topo, LAT, sched)
     current = res.best

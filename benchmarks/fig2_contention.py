@@ -13,8 +13,8 @@ from .common import Claim, table
 from repro.core.engine import EventEngine
 from repro.core.cep import build_cep, cep_resource_caps
 from repro.core.qoe import QoESpec
-from repro.sim import asteroid_plan, brute_force_optimal
-from repro.sim.runner import dora_plan, execute_plan, scenario_case
+from repro.sim.runner import dora_plan, scenario_case
+from repro.strategies import get_strategy
 
 LAT = QoESpec(t_qoe=0.0, lam=1e15)
 
@@ -43,13 +43,15 @@ def run(report) -> None:
     topo, graph, wl = scenario_case("smart_home_2", model="bert",
                                     mode="train")
 
-    ast = asteroid_plan(graph, topo, wl)
+    # both comparison points resolve through the strategy registry: the
+    # asteroid baseline returns its plan already priced under real fluid
+    # contention, brute_force real-evaluates its shortlist the same way
+    ast = get_strategy("asteroid").plan(graph, topo, LAT, wl).best
     d2d = _d2d_latency(ast, topo)
-    edge = execute_plan(ast, topo, LAT, scheduled=False).latency
+    edge = ast.latency
 
-    def evaluate(plan):
-        return execute_plan(plan, topo, LAT, scheduled=False).latency
-    opt = brute_force_optimal(graph, topo, wl, evaluate, shortlist=150)
+    opt = get_strategy("brute_force", shortlist=150).plan(
+        graph, topo, LAT, wl).best
     dora = dora_plan(graph, topo, LAT, wl).best
     if dora.latency < opt.latency:      # optimal = best of search ∪ planners
         opt = dora

@@ -4,10 +4,11 @@ from __future__ import annotations
 
 from .common import MODELS_TRAIN, SETTINGS, Claim, ms, table
 
-from repro.sim.runner import (best_baseline, compare_planners,
-                              setting_and_graph, workload_for)
+from repro.sim.runner import (COMPARISON_PLANNERS, best_baseline,
+                              compare_planners, setting_and_graph,
+                              workload_for)
 
-PLANNERS = ["edgeshard", "alpa", "metis", "asteroid", "dora"]
+PLANNERS = list(COMPARISON_PLANNERS)
 
 
 def run(report) -> None:
@@ -21,7 +22,8 @@ def run(report) -> None:
             results[(model, setting)] = res
             row = [model, setting]
             for p in PLANNERS:
-                row.append(ms(res[p].latency) if res[p].ok else "OOM")
+                row.append(ms(res[p].latency) if res[p].ok
+                           else res[p].failure_label)
             try:
                 _, bb = best_baseline(res)
                 sp = bb.latency / res["dora"].latency

@@ -4,14 +4,11 @@ in seconds end-to-end; the Phase-1 partitioner is subsecond.
 """
 from __future__ import annotations
 
-import time
-
 from .common import Claim, table
 
-from repro.core.partitioner import ModelPartitioner, PartitionerConfig
 from repro.core.qoe import QoESpec
-from repro.sim import asteroid_plan, metis_plan
 from repro.sim.runner import dora_plan, scenario_case
+from repro.strategies import get_strategy
 
 LAT = QoESpec(t_qoe=0.0, lam=1e15)
 MODELS = ["bert", "qwen3-1.7b", "qwen-omni"]
@@ -25,12 +22,10 @@ def run(report) -> None:
         for setting in SETTINGS:
             topo, graph, wl = scenario_case(setting, model=model,
                                             mode="train")
-            t0 = time.perf_counter()
-            metis_plan(graph, topo, wl)
-            t_metis = time.perf_counter() - t0
-            t0 = time.perf_counter()
-            asteroid_plan(graph, topo, wl)
-            t_ast = time.perf_counter() - t0
+            # phase1_s = pure planning time (fair execution excluded)
+            t_metis = get_strategy("metis").plan(graph, topo, LAT, wl).phase1_s
+            t_ast = get_strategy("asteroid").plan(graph, topo, LAT,
+                                                  wl).phase1_s
             res = dora_plan(graph, topo, LAT, wl)
             phase1_times.append(res.phase1_s)
             e2e_times.append(res.total_s)

@@ -54,13 +54,29 @@ class AdapterConfig:
     delta_switching: bool = True
 
 
+def _plan_tiebreak(p: ParallelismPlan) -> tuple:
+    """Deterministic total order over plans with equal (latency, energy):
+    structural signature, independent of construction/input order."""
+    return (p.n_stages, p.microbatch_size,
+            tuple((tuple(s.node_ids), tuple(s.devices)) for s in p.stages))
+
+
 def pareto_filter(plans: Sequence[ParallelismPlan]) -> List[ParallelismPlan]:
-    """Keep plans Pareto-optimal in (latency, energy)."""
-    ranked = sorted(plans, key=lambda p: (p.latency, p.energy))
+    """Keep plans Pareto-optimal in (latency, energy).
+
+    Domination is strict-with-tiebreak: a plan is dropped iff some kept
+    plan is no worse on both metrics and strictly better on at least
+    one.  Plans fully tied on (latency, energy) keep exactly one
+    deterministic representative (smallest structural signature), so the
+    result never depends on input order.
+    """
+    ranked = sorted(plans, key=lambda p: (p.latency, p.energy, _plan_tiebreak(p)))
     out: List[ParallelismPlan] = []
     best_e = math.inf
     for p in ranked:
-        if p.energy < best_e - 1e-12:
+        # strict: any genuine energy improvement survives, ties collapse
+        # onto the representative already kept at equal-or-lower latency
+        if p.energy < best_e:
             out.append(p)
             best_e = p.energy
     return out

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Protocol, Sequence, runtime_checkable
 
 from .device import Topology
 from .planning_graph import ModelGraph
@@ -83,6 +83,62 @@ PAPER_TRAIN_WORKLOAD = Workload(global_batch=32, microbatch_size=4,
                                 training=True, optimizer_mult=3.0)
 PAPER_SERVE_WORKLOAD = Workload(global_batch=8, microbatch_size=1,
                                 training=False)
+
+
+@runtime_checkable
+class CostProvider(Protocol):
+    """Source of the costs every planner strategy consumes.
+
+    Two fidelities share this protocol: :class:`AnalyticCosts` (pure
+    datasheet rooflines, the Phase-1 default) and
+    :class:`repro.core.profiler.ProfiledCosts` (the same rooflines
+    recalibrated by measured step times / kernel benchmarks).  A provider
+    is injected with ``dora.plan(..., costs=...)`` or passed to any
+    ``PlannerStrategy.plan``; consumers either ask for a ready
+    :class:`CostModel` or calibrate a topology and keep using their own
+    cost code on top of it.
+    """
+
+    name: str
+
+    def calibrate(self, topo: Topology) -> Topology:
+        """Topology with device/link rates adjusted to this provider's
+        view of the hardware (identity for analytic costs).  ``topo`` is
+        always the *raw* datasheet topology — calibration is not
+        idempotent for measured providers, so never re-calibrate an
+        already-calibrated topology."""
+        ...
+
+    def cost_model(self, graph: ModelGraph, topo: Topology,
+                   workload: Workload) -> "CostModel":
+        """A :class:`CostModel` pricing ``graph`` for ``workload``.
+        ``topo`` is the *raw* topology; the provider calibrates it
+        internally (do not pass ``calibrate(topo)`` here)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticCosts:
+    """The default provider: roofline costs straight from the
+    ``DeviceProfile``/``LinkResource`` datasheet numbers."""
+
+    name: str = "analytic"
+
+    def calibrate(self, topo: Topology) -> Topology:
+        return topo
+
+    def cost_model(self, graph: ModelGraph, topo: Topology,
+                   workload: Workload) -> "CostModel":
+        return CostModel(graph, topo, workload)
+
+
+#: Shared default instance (stateless, safe to reuse).
+ANALYTIC_COSTS = AnalyticCosts()
+
+
+def resolve_costs(costs: Optional[CostProvider]) -> CostProvider:
+    """``None`` -> the analytic default; anything else passes through."""
+    return ANALYTIC_COSTS if costs is None else costs
 
 
 class CostModel:

@@ -6,7 +6,7 @@ import time
 from typing import Dict, List, Optional, Sequence
 
 from .adapter import AdapterConfig, RuntimeAdapter, pareto_filter
-from .cost_model import Workload
+from .cost_model import CostProvider, Workload, resolve_costs
 from .device import Topology
 from .partitioner import ModelPartitioner, PartitionerConfig
 from .planning_graph import ModelGraph
@@ -34,12 +34,18 @@ class DoraPlanner:
     def __init__(self, graph: ModelGraph, topo: Topology, qoe: QoESpec,
                  partitioner_config: Optional[PartitionerConfig] = None,
                  scheduler_config: Optional[SchedulerConfig] = None,
-                 adapter_config: Optional[AdapterConfig] = None):
+                 adapter_config: Optional[AdapterConfig] = None,
+                 costs: Optional[CostProvider] = None):
         self.graph = graph
-        self.topo = topo
+        self.costs = resolve_costs(costs)
+        # the whole stack (partitioner, scheduler, adapter) plans against
+        # the provider's view of the hardware — analytic by default,
+        # measurement-calibrated with ProfiledCosts
+        self.topo = self.costs.calibrate(topo)
         self.qoe = qoe
-        self.partitioner = ModelPartitioner(graph, topo, qoe, partitioner_config)
-        self.scheduler = NetworkScheduler(topo, qoe, scheduler_config)
+        self.partitioner = ModelPartitioner(self.graph, self.topo, qoe,
+                                            partitioner_config)
+        self.scheduler = NetworkScheduler(self.topo, qoe, scheduler_config)
         self.adapter_config = adapter_config
 
     def plan(self, workload: Workload) -> PlanningResult:

@@ -6,10 +6,16 @@ path of the respective microbatch schedules by dynamic programming over
 (StartPhaseTimeEst / EndPhaseTimeEst) is implemented literally in
 ``alg2_start_phase`` / ``alg2_end_phase`` and validated against the
 exact evaluators in tests.
+
+:class:`ProfiledCosts` is the measured counterpart to
+``core.cost_model.AnalyticCosts``: both implement the ``CostProvider``
+protocol, so any planner strategy can be fed kernel-/step-measured
+rates instead of datasheet rooflines (``dora.plan(..., costs=...)``).
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+import dataclasses
+from typing import List, Mapping, Sequence, Tuple
 
 
 def gpipe_latency(bf: Sequence[float], bb: Sequence[float], n_micro: int,
@@ -109,6 +115,63 @@ def one_f_one_b_latency(bf: Sequence[float], bb: Sequence[float], n_micro: int,
         if not progressed:
             raise RuntimeError("1F1B schedule deadlocked (bug)")
     return max(dev_free)
+
+
+# ---------------------------------------------------------------------------
+# Profiled cost provider (CostProvider protocol, measured fidelity)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ProfiledCosts:
+    """Cost provider recalibrated by measurements.
+
+    ``compute_factor[device_name]`` scales that device's achievable
+    compute rate (measured/analytic throughput ratio — e.g. from a
+    kernel benchmark or a timed training step); ``bandwidth_factor``
+    does the same per link-resource name (measured goodput / datasheet
+    capacity).  Unlisted devices/links fall back to the ``default_*``
+    factor, so a single global MFU correction is one constructor call.
+    """
+
+    compute_factor: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    bandwidth_factor: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    default_compute: float = 1.0
+    default_bandwidth: float = 1.0
+    name: str = "profiled"
+
+    def calibrate(self, topo):
+        from .device import Topology
+        devs = [dataclasses.replace(
+                    d, compute_efficiency=d.compute_efficiency
+                    * self.compute_factor.get(d.name, self.default_compute))
+                for d in topo.devices]
+        res = [dataclasses.replace(
+                   r, capacity=r.capacity
+                   * self.bandwidth_factor.get(r.name, self.default_bandwidth))
+               for r in topo.resources.values()]
+        return Topology(devs, res, topo._p2p)
+
+    def cost_model(self, graph, topo, workload):
+        from .cost_model import CostModel
+        return CostModel(graph, self.calibrate(topo), workload)
+
+    @classmethod
+    def from_measurements(
+            cls,
+            device_seconds: Mapping[str, Tuple[float, float]] = (),
+            link_bytes_per_s: Mapping[str, Tuple[float, float]] = (),
+            ) -> "ProfiledCosts":
+        """Build factors from ``(analytic, measured)`` pairs.
+
+        ``device_seconds`` maps a device name to (analytic step seconds,
+        measured step seconds): a device measured 2x slower than the
+        roofline gets factor 0.5.  ``link_bytes_per_s`` maps a link name
+        to (datasheet capacity, measured goodput).
+        """
+        comp = {k: a / m for k, (a, m) in dict(device_seconds).items()
+                if a > 0.0 and m > 0.0}
+        bw = {k: m / a for k, (a, m) in dict(link_bytes_per_s).items()
+              if a > 0.0 and m > 0.0}
+        return cls(compute_factor=comp, bandwidth_factor=bw)
 
 
 # ---------------------------------------------------------------------------

@@ -19,16 +19,34 @@ remains reachable through keyword overrides (``workload=``, ``qoe=``,
 ``graph=``, ``topology=``, ``partitioner_config=``, ...), so the facade
 never forces a drop back down to hand-wiring ``DoraPlanner``.
 
+Planners themselves are pluggable: ``plan`` takes a ``strategy=`` from
+the ``repro.strategies`` registry (``"dora"``, ``"throughput_max"``,
+``"chain_split"``, ``"pareto_split"``, the §6.1 baselines, ...), and
+``compare`` runs several strategies on one scenario and tabulates
+latency/energy/QoE with speedup-vs-baseline columns::
+
+    cmp = dora.compare("smart_home_2",
+                       strategies=["dora", "throughput_max", "chain_split"])
+    print(cmp.summary()); cmp.to_json("compare.json")
+
+Cost fidelity is pluggable too: every verb accepts ``costs=`` (a
+``CostProvider`` — analytic rooflines by default, measurement-calibrated
+via ``repro.core.profiler.ProfiledCosts``).
+
 This module is deliberately jax-free: planning is analytic, so importing
 ``repro.dora`` never initializes an accelerator backend.
 """
 from __future__ import annotations
 
+import copy as _copy
 import dataclasses
+import json
+import math
+import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .core.adapter import AdapterConfig, DynamicsEvent, RuntimeAdapter
-from .core.cost_model import Workload
+from .core.cost_model import CostProvider, Workload
 from .core.device import Topology
 from .core.partitioner import PartitionerConfig
 from .core.planner import DoraPlanner, PlanningResult
@@ -37,11 +55,45 @@ from .core.plans import ParallelismPlan
 from .core.qoe import QoESpec
 from .core.scheduler import SchedulerConfig
 from .scenarios import Scenario, get_scenario
+from .strategies import StrategyRef, get_strategy
 
 ScenarioRef = Union[str, Scenario]
 
 # (label, event) or bare event — both accepted by simulate().
 TimelineItem = Union[DynamicsEvent, Tuple[str, DynamicsEvent]]
+
+#: Default strategy line-up for ``dora.compare``.
+DEFAULT_COMPARISON = ("dora", "throughput_max", "chain_split", "pareto_split")
+
+
+def _json_num(x: Optional[float]) -> Optional[float]:
+    """inf/nan -> None so exports stay strict-JSON parseable."""
+    if x is None or math.isinf(x) or math.isnan(x):
+        return None
+    return x
+
+
+def _plan_dict(plan: ParallelismPlan) -> Dict[str, object]:
+    """Machine-readable summary of one plan (JSON-safe)."""
+    return {
+        "latency_s": _json_num(plan.latency),
+        "energy_j": _json_num(plan.energy),
+        "objective": _json_num(plan.objective),
+        "microbatch_size": plan.microbatch_size,
+        "n_microbatches": plan.n_microbatches,
+        "training": plan.training,
+        "stages": [{
+            "n_nodes": len(s.node_ids),
+            "devices": list(s.devices),
+            "dp_degree": s.dp_degree,
+            "tp_degree": s.tp_degree,
+        } for s in plan.stages],
+        "per_device_energy_j":
+            {str(d): _json_num(e) for d, e in plan.per_device_energy.items()},
+        "per_device_memory_gb":
+            {str(d): _json_num(m / 1e9)
+             for d, m in plan.per_device_memory.items()},
+    }
 
 
 @dataclasses.dataclass
@@ -54,6 +106,7 @@ class PlanReport:
     workload: Workload
     qoe: QoESpec
     result: PlanningResult
+    strategy: str = "dora"
 
     @property
     def best(self) -> ParallelismPlan:
@@ -83,10 +136,33 @@ class PlanReport:
     def planning_seconds(self) -> float:
         return self.result.total_s
 
+    def to_dict(self) -> Dict[str, object]:
+        """Machine-readable report (strict-JSON-safe) for ``--json``
+        artifacts and future ``BENCH_*.json`` trajectories."""
+        return {
+            "scenario": self.scenario.name,
+            "mode": self.scenario.mode,
+            "model": self.scenario.model_name,
+            "strategy": self.strategy,
+            "devices": self.topology.n,
+            "qoe": {"t_qoe_s": _json_num(self.qoe.t_qoe),
+                    "e_qoe_j": _json_num(self.qoe.e_qoe),
+                    "lam": _json_num(self.qoe.lam)},
+            "latency_s": _json_num(self.latency),
+            "energy_j": _json_num(self.energy),
+            "meets_qoe": self.meets_qoe,
+            "planning_s": _json_num(self.planning_seconds),
+            "best": _plan_dict(self.best),
+            "pareto": [{"latency_s": _json_num(p.latency),
+                        "energy_j": _json_num(p.energy)}
+                       for p in self.pareto],
+        }
+
     def summary(self) -> str:
         lines = [
             f"scenario {self.scenario.name} [{self.scenario.mode}] "
-            f"model={self.scenario.model_name} devices={self.topology.n}",
+            f"model={self.scenario.model_name} devices={self.topology.n} "
+            f"strategy={self.strategy}",
             f"planned in {self.result.total_s:.2f}s "
             f"(phase1 {self.result.phase1_s:.2f}s + "
             f"phase2 {self.result.phase2_s:.2f}s)",
@@ -126,7 +202,8 @@ def planner_for(scenario: ScenarioRef, *,
                 seq_len: Optional[int] = None,
                 partitioner_config: Optional[PartitionerConfig] = None,
                 scheduler_config: Optional[SchedulerConfig] = None,
-                adapter_config: Optional[AdapterConfig] = None
+                adapter_config: Optional[AdapterConfig] = None,
+                costs: Optional[CostProvider] = None
                 ) -> Tuple[DoraPlanner, Scenario, Workload]:
     """Construct (planner, scenario, workload) without running it —
     the escape hatch for callers that sweep planner configurations."""
@@ -135,22 +212,231 @@ def planner_for(scenario: ScenarioRef, *,
     planner = DoraPlanner(g, topo, q,
                           partitioner_config=partitioner_config,
                           scheduler_config=scheduler_config,
-                          adapter_config=adapter_config)
+                          adapter_config=adapter_config,
+                          costs=costs)
     return planner, sc, wl
 
 
-def plan(scenario: ScenarioRef, **overrides) -> PlanReport:
-    """Run Algorithm 1 end to end for one scenario.
+def plan(scenario: ScenarioRef, strategy: StrategyRef = "dora",
+         **overrides) -> PlanReport:
+    """Plan one scenario with any registered planner strategy.
 
-    ``dora.plan("smart_home_2")`` plans the registered deployment as-is;
-    keyword overrides swap any ingredient (``workload=``, ``qoe=``,
-    ``graph=``, ``topology=``, ``seq_len=``, ``partitioner_config=``,
-    ``scheduler_config=``).
+    ``dora.plan("smart_home_2")`` runs Algorithm 1 end to end for the
+    registered deployment; keyword overrides swap any ingredient
+    (``workload=``, ``qoe=``, ``graph=``, ``topology=``, ``seq_len=``,
+    ``partitioner_config=``, ``scheduler_config=``, ``costs=``).
+
+    ``strategy=`` selects a different planner from the
+    ``repro.strategies`` registry (name or instance), e.g.
+    ``dora.plan("smart_home_2", strategy="chain_split")``; planner
+    configuration then goes through
+    ``get_strategy(name, **params)`` rather than the DoraPlanner
+    config overrides.
     """
-    planner, sc, wl = planner_for(scenario, **overrides)
-    result = planner.plan(wl)
-    return PlanReport(scenario=sc, topology=planner.topo, graph=planner.graph,
-                      workload=wl, qoe=planner.qoe, result=result)
+    if strategy == "dora":
+        planner, sc, wl = planner_for(scenario, **overrides)
+        result = planner.plan(wl)
+        return PlanReport(scenario=sc, topology=planner.topo,
+                          graph=planner.graph, workload=wl, qoe=planner.qoe,
+                          result=result)
+    strat = get_strategy(strategy)
+    bad = {k for k in ("partitioner_config", "scheduler_config",
+                       "adapter_config") if overrides.get(k) is not None}
+    if bad:
+        raise ValueError(f"{sorted(bad)} only apply to the 'dora' strategy; "
+                         f"configure {strat.name!r} via "
+                         f"get_strategy(name, **params) and pass the instance")
+    costs = overrides.pop("costs", None)
+    for k in ("partitioner_config", "scheduler_config", "adapter_config"):
+        overrides.pop(k, None)
+    sc, topo, g, wl, q = _resolve(scenario,
+                                  overrides.pop("topology", None),
+                                  overrides.pop("graph", None),
+                                  overrides.pop("workload", None),
+                                  overrides.pop("qoe", None),
+                                  overrides.pop("seq_len", None))
+    if overrides:
+        raise TypeError(f"unexpected overrides: {sorted(overrides)}")
+    result = strat.plan(g, topo, q, wl, costs=costs)
+    return PlanReport(scenario=sc, topology=topo, graph=g, workload=wl,
+                      qoe=q, result=result, strategy=strat.name)
+
+
+@dataclasses.dataclass
+class StrategyOutcome:
+    """One strategy's run inside a :class:`ComparisonReport`."""
+
+    strategy: str
+    result: Optional[PlanningResult] = None
+    planning_s: float = 0.0
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None and self.result is not None
+
+    @property
+    def latency(self) -> float:
+        return self.result.best.latency if self.ok else math.inf
+
+    @property
+    def energy(self) -> float:
+        return self.result.best.energy if self.ok else math.inf
+
+
+@dataclasses.dataclass
+class ComparisonReport:
+    """Several planner strategies on one scenario, side by side.
+
+    Latency/energy are real-topology numbers (contention-aware
+    strategies price contention themselves; oblivious ones are executed
+    under fluid-fair sharing).  ``reference`` (normally ``"dora"``)
+    anchors the speedup / energy-savings columns.
+    """
+
+    scenario: Scenario
+    qoe: QoESpec
+    reference: str
+    outcomes: Dict[str, StrategyOutcome]
+
+    def __getitem__(self, name: str) -> StrategyOutcome:
+        return self.outcomes[name]
+
+    @property
+    def strategies(self) -> List[str]:
+        return list(self.outcomes)
+
+    def meets_qoe(self, name: str) -> bool:
+        out = self.outcomes[name]
+        return out.ok and out.latency <= self.qoe.t_qoe
+
+    def speedup(self, name: str) -> float:
+        """How many times faster the reference is than ``name``
+        (>1 means the reference wins)."""
+        ref = self.outcomes[self.reference]
+        out = self.outcomes[name]
+        if not (ref.ok and out.ok):
+            return math.nan
+        return out.latency / ref.latency
+
+    def energy_savings(self, name: str) -> float:
+        """Fraction of ``name``'s energy the reference saves (0.21 =
+        21% less energy than that baseline)."""
+        ref = self.outcomes[self.reference]
+        out = self.outcomes[name]
+        if not (ref.ok and out.ok) or out.energy <= 0.0:
+            return math.nan
+        return 1.0 - ref.energy / out.energy
+
+    def best_baseline(self) -> Tuple[str, StrategyOutcome]:
+        """Fastest successful non-reference strategy."""
+        ok = {k: v for k, v in self.outcomes.items()
+              if k != self.reference and v.ok}
+        if not ok:
+            raise RuntimeError("no baseline strategy produced a valid plan")
+        name = min(ok, key=lambda k: ok[k].latency)
+        return name, ok[name]
+
+    def to_dict(self) -> Dict[str, object]:
+        rows = {}
+        for name, out in self.outcomes.items():
+            rows[name] = {
+                "ok": out.ok,
+                "error": out.error,
+                "latency_s": _json_num(out.latency),
+                "energy_j": _json_num(out.energy),
+                "meets_qoe": self.meets_qoe(name),
+                "planning_s": _json_num(out.planning_s),
+                "speedup_vs_reference": _json_num(self.speedup(name))
+                    if out.ok else None,
+                "reference_energy_savings": _json_num(self.energy_savings(name))
+                    if out.ok else None,
+                "best": _plan_dict(out.result.best) if out.ok else None,
+            }
+        return {
+            "scenario": self.scenario.name,
+            "mode": self.scenario.mode,
+            "model": self.scenario.model_name,
+            "reference": self.reference,
+            "qoe": {"t_qoe_s": _json_num(self.qoe.t_qoe),
+                    "e_qoe_j": _json_num(self.qoe.e_qoe),
+                    "lam": _json_num(self.qoe.lam)},
+            "strategies": rows,
+        }
+
+    def to_json(self, path: Optional[str] = None, indent: int = 2) -> str:
+        """Serialize to strict JSON; optionally also write to ``path``."""
+        text = json.dumps(self.to_dict(), indent=indent, allow_nan=False)
+        if path is not None:
+            with open(path, "w", encoding="utf-8") as f:
+                f.write(text + "\n")
+        return text
+
+    def summary(self) -> str:
+        headers = ("strategy", "lat (ms)", "energy (J)", "QoE", "plan (s)",
+                   f"vs {self.reference}")
+        rows: List[Tuple[str, ...]] = []
+        for name, out in self.outcomes.items():
+            if not out.ok:
+                rows.append((name, "ERROR", out.error or "?", "-", "-", "-"))
+                continue
+            sp = self.speedup(name)
+            sv = self.energy_savings(name)
+            vs = ("(reference)" if name == self.reference else
+                  f"{sp:.2f}x lat, {sv:+.0%} E")
+            rows.append((name, f"{out.latency * 1e3:.1f}",
+                         f"{out.energy:.1f}",
+                         "MET" if self.meets_qoe(name) else "MISS",
+                         f"{out.planning_s:.2f}", vs))
+        widths = [max(len(h), *(len(r[i]) for r in rows))
+                  for i, h in enumerate(headers)]
+        lines = [f"strategy comparison — scenario {self.scenario.name} "
+                 f"[{self.scenario.mode}] model={self.scenario.model_name}",
+                 "  ".join(h.ljust(w) for h, w in zip(headers, widths)),
+                 "  ".join("-" * w for w in widths)]
+        for r in rows:
+            lines.append("  ".join(v.ljust(w) for v, w in zip(r, widths)))
+        return "\n".join(lines)
+
+
+def compare(scenario: ScenarioRef,
+            strategies: Sequence[StrategyRef] = DEFAULT_COMPARISON, *,
+            costs: Optional[CostProvider] = None,
+            topology: Optional[Topology] = None,
+            graph: Optional[ModelGraph] = None,
+            workload: Optional[Workload] = None,
+            qoe: Optional[QoESpec] = None,
+            seq_len: Optional[int] = None) -> ComparisonReport:
+    """Run several planner strategies on one scenario and tabulate them.
+
+    Strategies resolve through the ``repro.strategies`` registry (names
+    or instances); ``"dora"`` gets the benchmark-grade search
+    (``top_k=10`` + microbatch sweep) so the comparison matches the
+    Fig. 8/9 harnesses.  A strategy that fails (e.g. EdgeShard OOM)
+    becomes an error row, not an exception — the failure is the finding.
+    """
+    if not strategies:
+        raise ValueError("compare needs at least one strategy "
+                         f"(e.g. {list(DEFAULT_COMPARISON)})")
+    sc, topo, g, wl, q = _resolve(scenario, topology, graph, workload, qoe,
+                                  seq_len)
+    outcomes: Dict[str, StrategyOutcome] = {}
+    for ref in strategies:
+        strat = (get_strategy(ref, top_k=10, sweep_microbatch=True)
+                 if ref == "dora" else get_strategy(ref))
+        t0 = time.perf_counter()
+        try:
+            result = strat.plan(g, topo, q, wl, costs=costs)
+            outcomes[strat.name] = StrategyOutcome(
+                strategy=strat.name, result=result,
+                planning_s=result.total_s)
+        except Exception as e:  # noqa: BLE001 — the failure is the finding
+            outcomes[strat.name] = StrategyOutcome(
+                strategy=strat.name, planning_s=time.perf_counter() - t0,
+                error=f"{type(e).__name__}: {e}")
+    reference = "dora" if "dora" in outcomes else next(iter(outcomes))
+    return ComparisonReport(scenario=sc, qoe=q, reference=reference,
+                            outcomes=outcomes)
 
 
 @dataclasses.dataclass
@@ -210,6 +496,18 @@ class SimulationTrace:
     def qoe_violations(self) -> int:
         return sum(1 for s in self.steps if not s.qoe_ok)
 
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "scenario": self.report.scenario.name,
+            "baseline_latency_s": _json_num(self.report.latency),
+            "qoe_violations": self.qoe_violations,
+            "steps": [{
+                "t": s.t, "label": s.label, "action": s.action,
+                "react_s": _json_num(s.react_seconds),
+                "latency_s": _json_num(s.latency), "qoe_ok": s.qoe_ok,
+            } for s in self.steps],
+        }
+
     def summary(self) -> str:
         lines = [f"baseline latency {self.report.latency * 1e3:.1f} ms "
                  f"(QoE target {self.report.qoe.t_qoe:g}s)"]
@@ -227,6 +525,7 @@ class SimulationTrace:
 def simulate(scenario: ScenarioRef,
              events: Optional[Sequence[TimelineItem]] = None,
              session: Optional[ServeSession] = None,
+             copy: bool = False,
              **overrides) -> SimulationTrace:
     """Replay a dynamics timeline through the runtime adapter.
 
@@ -236,6 +535,15 @@ def simulate(scenario: ScenarioRef,
     latency) is recorded in the returned trace.  Pass an existing
     ``session`` (from ``dora.serve`` of the *same* scenario) to reuse
     its plan instead of re-running the planner.
+
+    **Mutation contract:** replaying events *advances the session* —
+    ``session.current`` tracks the adapter's latest plan and the
+    adapter's internal Pareto set is re-evaluated under the final
+    event's conditions, exactly as a live deployment would be left.
+    Pass ``copy=True`` to deep-copy the session (adapter state
+    included) first and replay against the copy, leaving the caller's
+    session untouched; the returned trace then references the copy's
+    report.
     """
     if session is None:
         session = serve(scenario, **overrides)
@@ -248,6 +556,8 @@ def simulate(scenario: ScenarioRef,
         if overrides:
             raise ValueError("overrides are ignored when reusing a session; "
                              "pass them to dora.serve instead")
+        if copy:
+            session = _copy.deepcopy(session)
     timeline: List[Tuple[str, DynamicsEvent]] = []
     source: Sequence[TimelineItem] = (
         events if events is not None else session.report.scenario.timeline)
@@ -268,5 +578,6 @@ def simulate(scenario: ScenarioRef,
 
 __all__ = [
     "PlanReport", "ServeSession", "SimulationStep", "SimulationTrace",
-    "plan", "planner_for", "serve", "simulate",
+    "StrategyOutcome", "ComparisonReport", "DEFAULT_COMPARISON",
+    "plan", "planner_for", "serve", "simulate", "compare",
 ]

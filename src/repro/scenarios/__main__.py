@@ -1,21 +1,31 @@
 """Scenario sweep CLI.
 
     PYTHONPATH=src python -m repro.scenarios --list
+    PYTHONPATH=src python -m repro.scenarios --strategies
     PYTHONPATH=src python -m repro.scenarios --run smart_home_2
     PYTHONPATH=src python -m repro.scenarios --run all [--simulate]
+    PYTHONPATH=src python -m repro.scenarios --run smart_home_2 \
+        --strategy chain_split
+    PYTHONPATH=src python -m repro.scenarios --run smart_home_2 \
+        --compare dora throughput_max chain_split --json out.json
 
-``--list`` prints the registry; ``--run`` plans the named scenario(s)
-through the ``repro.dora`` facade and prints each PlanReport;
+``--list`` prints the scenario registry; ``--strategies`` the planner
+registry; ``--run`` plans the named scenario(s) through the
+``repro.dora`` facade and prints each PlanReport; ``--strategy`` swaps
+the planner; ``--compare`` runs several strategies side by side;
 ``--simulate`` additionally replays each scenario's registered dynamics
-timeline through the runtime adapter.
+timeline through the runtime adapter; ``--json PATH`` writes everything
+the run produced as one machine-readable artifact.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
-from typing import List
+from typing import Dict, List, Optional, Sequence
 
 from .. import dora
+from ..strategies import list_strategies
 from . import get_scenario, iter_scenarios, list_scenarios
 
 
@@ -31,8 +41,10 @@ def _print_listing(tag: str = None) -> None:
     print(f"\n{len(rows)} scenarios registered")
 
 
-def _run(names: List[str], simulate: bool) -> int:
+def _run(names: List[str], strategy: str, compare: Optional[Sequence[str]],
+         simulate: bool, json_path: Optional[str]) -> int:
     failures = 0
+    artifact: Dict[str, Dict[str, object]] = {}
     for name in names:
         try:
             sc = get_scenario(name)
@@ -40,17 +52,50 @@ def _run(names: List[str], simulate: bool) -> int:
             print(f"error: {e.args[0]}", file=sys.stderr)
             failures += 1
             continue
+        entry: Dict[str, object] = {}
+        artifact[sc.name] = entry
         print(f"\n===== {name} " + "=" * max(0, 60 - len(name)))
+        if compare is not None:
+            strategies = list(compare) or list(dora.DEFAULT_COMPARISON)
+            try:
+                cmp = dora.compare(sc, strategies=strategies)
+            except ValueError as e:      # e.g. a typo'd strategy name
+                print(f"error: {e}", file=sys.stderr)
+                entry["error"] = str(e)
+                failures += 1
+                continue
+            print(cmp.summary())
+            entry["compare"] = cmp.to_dict()
+            failures += sum(1 for s in cmp.strategies if not cmp[s].ok)
+            continue
         try:
-            session = dora.serve(sc)
+            if strategy == "dora":
+                session = dora.serve(sc)
+                report = session.report
+            else:
+                session = None
+                report = dora.plan(sc, strategy=strategy)
         except Exception as e:  # noqa: BLE001 — keep sweeping on failure
             print(f"[ERROR] planning failed: {type(e).__name__}: {e}")
+            entry["error"] = f"{type(e).__name__}: {e}"
             failures += 1
             continue
-        print(session.report.summary())
+        print(report.summary())
+        entry["plan"] = report.to_dict()
         if simulate and sc.timeline:
-            print("\ndynamics timeline:")
-            print(dora.simulate(sc, session=session).summary())
+            if session is None:
+                print("\n(--simulate needs the runtime adapter, which only "
+                      "the 'dora' strategy arms; skipping timeline)")
+            else:
+                print("\ndynamics timeline:")
+                trace = dora.simulate(sc, session=session)
+                print(trace.summary())
+                entry["simulate"] = trace.to_dict()
+    if json_path is not None:
+        with open(json_path, "w", encoding="utf-8") as f:
+            json.dump({"scenarios": artifact}, f, indent=2, allow_nan=False)
+            f.write("\n")
+        print(f"\nwrote {json_path}")
     return failures
 
 
@@ -60,22 +105,38 @@ def main(argv=None) -> int:
         description="List or sweep Dora's registered deployment scenarios.")
     ap.add_argument("--list", action="store_true",
                     help="print the scenario registry and exit")
+    ap.add_argument("--strategies", action="store_true",
+                    help="print the planner-strategy registry and exit")
     ap.add_argument("--run", nargs="+", metavar="NAME",
                     help="plan the named scenario(s); 'all' sweeps the "
                          "whole registry")
     ap.add_argument("--tag", default=None,
                     help="filter --list/--run all by tag (e.g. paper, serve)")
+    ap.add_argument("--strategy", default="dora", metavar="STRAT",
+                    help="planner strategy for --run (see --strategies)")
+    ap.add_argument("--compare", nargs="*", metavar="STRAT", default=None,
+                    help="with --run: compare strategies side by side "
+                         "(no names -> the default line-up)")
     ap.add_argument("--simulate", action="store_true",
                     help="with --run: also replay each scenario's dynamics "
                          "timeline through the runtime adapter")
+    ap.add_argument("--json", default=None, metavar="PATH", dest="json_path",
+                    help="with --run: write plans/comparisons/traces as one "
+                         "machine-readable JSON artifact")
     args = ap.parse_args(argv)
 
+    if args.strategies:
+        for name in list_strategies():
+            print(name)
+        print(f"\n{len(list_strategies())} strategies registered")
+        return 0
     if args.list or not args.run:
         _print_listing(args.tag)
         return 0
     names = (list_scenarios(args.tag) if args.run == ["all"]
              else list(args.run))
-    return _run(names, args.simulate)
+    return _run(names, args.strategy, args.compare, args.simulate,
+                args.json_path)
 
 
 if __name__ == "__main__":

@@ -1,19 +1,21 @@
-"""Edge-deployment simulator + baseline planners.
+"""Edge-deployment simulator.
 
 Validates the paper's claims without edge hardware: the registered
 deployment scenarios (``repro.scenarios`` — Table-3 settings and
-beyond), the discrete-event engine (``core.engine``),
-Asteroid-/EdgeShard-/Alpa-/Metis-like baselines, and a brute-force
-optimal searcher for small device counts.
+beyond), the discrete-event engine (``core.engine``), and the
+contended-execution runner.  The baseline planners moved to the
+strategy registry (``repro.strategies``); their ``*_plan`` functions
+stay re-exported here for back compatibility.
 """
 from .baselines import (BaselineError, alpa_plan, asteroid_plan,
                         brute_force_optimal, edgeshard_plan, metis_plan)
-from .runner import (ExecResult, compare_planners, dora_plan, execute_plan,
-                     scenario_case, setting_and_graph, workload_for)
+from .runner import (COMPARISON_PLANNERS, ExecResult, compare_planners,
+                     dora_plan, execute_plan, run_strategy, scenario_case,
+                     setting_and_graph, workload_for)
 
 __all__ = [
     "BaselineError", "alpa_plan", "asteroid_plan", "brute_force_optimal",
-    "edgeshard_plan", "metis_plan", "ExecResult", "compare_planners",
-    "dora_plan", "execute_plan", "scenario_case", "setting_and_graph",
-    "workload_for",
+    "edgeshard_plan", "metis_plan", "COMPARISON_PLANNERS", "ExecResult",
+    "compare_planners", "dora_plan", "execute_plan", "run_strategy",
+    "scenario_case", "setting_and_graph", "workload_for",
 ]

@@ -1,339 +1,20 @@
-"""Baseline hybrid-parallelism planners (§6.1) + brute-force optimal.
+"""Back-compat shim — the baseline planners moved to
+:mod:`repro.strategies.baselines`, where they are registered in the
+planner-strategy registry (``repro.strategies.get_strategy``).
 
-Each baseline reproduces the *planning assumptions* of the cited system;
-all plans are then executed on the REAL topology by ``sim.runner`` (fair
-fluid-shared contention — what a contention-oblivious plan actually
-suffers, Fig. 2):
-
-* ``edgeshard_plan`` — pipeline-only, even layer split, one device per
-  stage, memory-oblivious (EdgeShard [33]; OOMs in Traffic Monitor).
-* ``asteroid_plan``  — heterogeneity-aware hybrid PP+DP maximizing raw
-  throughput under idealized contention-free D2D links (Asteroid [30]).
-* ``alpa_plan``      — DP/PP/TP automation assuming HOMOGENEOUS devices
-  and uniform bandwidth (Alpa [38]): stages balanced for the mean
-  device, uniform microbatch split.
-* ``metis_plan``     — heterogeneity-aware load balancing (Metis [26])
-  but with a uniform, contention-free network model.
-* ``brute_force_optimal`` — exhaustive search over (contiguous stage
-  splits × ordered device groupings), each candidate executed under the
-  real contention model ("Optimal" in Fig. 2).
+The plain ``*_plan`` functions stay importable from here (and from
+``repro.sim``) for existing callers; new code should resolve planners
+through the registry instead.
 """
 from __future__ import annotations
 
-import dataclasses
-import itertools
-import math
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from ..strategies.baselines import (  # noqa: F401
+    LATENCY_ONLY, BaselineError, alpa_plan, asteroid_plan,
+    brute_force_optimal, edgeshard_plan, metis_plan, plan_memory_ok,
+    reprice_stage)
 
-from ..core.cost_model import CostModel, Workload
-from ..core.device import DeviceProfile, LinkResource, Topology
-from ..core.partitioner import ModelPartitioner, PartitionerConfig
-from ..core.planning_graph import ModelGraph
-from ..core.plans import ParallelismPlan, Stage
-from ..core.qoe import QoESpec
-
-LATENCY_ONLY = QoESpec(t_qoe=0.0, lam=1e15)   # objective ≈ pure latency
-
-
-class BaselineError(RuntimeError):
-    """Planner could not produce a valid plan (e.g. EdgeShard OOM)."""
-
-
-# ----------------------------------------------------------------------------
-# helpers
-# ----------------------------------------------------------------------------
-def _uniform_split(devices: Sequence[int]) -> Dict[int, float]:
-    return {d: 1.0 / len(devices) for d in devices}
-
-
-def reprice_stage(cm: CostModel, st: Stage, topo: Topology) -> Stage:
-    """Recompute stage times under the REAL device speeds for the stage's
-    (possibly non-proportional) microbatch split: a replica group finishes
-    when its slowest member does. Includes the weight-streaming roofline
-    term (every replica reads the stage weights once per microbatch)."""
-    t_f = t_b = 0.0
-    w_read = st.param_bytes / max(st.tp_degree, 1)
-    for d in st.devices:
-        dev = topo.devices[d]
-        share = st.microbatch_split[d]
-        f = dev.effective_flops(st.tp_degree)
-        t_f = max(t_f, st.flops_fwd * share / f, w_read / dev.mem_bw)
-        if st.flops_bwd > 0:
-            t_b = max(t_b, st.flops_bwd * share / f, 2.0 * w_read / dev.mem_bw)
-    return dataclasses.replace(st, fwd_time=t_f, bwd_time=t_b)
-
-
-def _contiguous_splits(n_items: int, n_parts: int) -> Iterable[Tuple[int, ...]]:
-    """Yield sizes of contiguous partitions of n_items into n_parts ≥1 parts."""
-    if n_parts == 1:
-        yield (n_items,)
-        return
-    for first in range(1, n_items - n_parts + 2):
-        for rest in _contiguous_splits(n_items - first, n_parts - 1):
-            yield (first,) + rest
-
-
-def _chain_nodes(graph: ModelGraph) -> List[int]:
-    """Serialized node order (baselines treat the model as a chain)."""
-    return graph.topological_order()
-
-
-def _balance_boundaries(costs: Sequence[float], weights: Sequence[float]
-                        ) -> List[int]:
-    """Split ``costs`` into len(weights) contiguous groups with group cost
-    ≈ proportional to ``weights`` (prefix-sum walk)."""
-    total = sum(costs)
-    targets = [w / sum(weights) * total for w in weights]
-    sizes: List[int] = []
-    i = 0
-    for s, tgt in enumerate(targets):
-        remaining_parts = len(targets) - s - 1
-        acc = 0.0
-        j = i
-        # leave at least one node per remaining part
-        while j < len(costs) - remaining_parts and (acc < tgt or j == i):
-            nxt = acc + costs[j]
-            if acc >= tgt * 0.5 and nxt > tgt * 1.5 and j > i:
-                break
-            acc = nxt
-            j += 1
-        sizes.append(j - i)
-        i = j
-    if i < len(costs):
-        sizes[-1] += len(costs) - i
-    return sizes
-
-
-def _make_plan(graph: ModelGraph, topo: Topology, wl: Workload, qoe: QoESpec,
-               groups: Sequence[Sequence[int]],
-               device_groups: Sequence[Sequence[int]],
-               uniform_split: bool = False,
-               schedule: str = "1f1b") -> ParallelismPlan:
-    cm = CostModel(graph, topo, wl)
-    stages: List[Stage] = []
-    for node_ids, devs in zip(groups, device_groups):
-        st = cm.make_stage(list(node_ids), list(devs))
-        if uniform_split:
-            st = dataclasses.replace(st, microbatch_split=_uniform_split(devs))
-            st = reprice_stage(cm, st, topo)
-        stages.append(st)
-    return cm.evaluate(stages, qoe, schedule)
-
-
-def plan_memory_ok(plan: ParallelismPlan, topo: Topology,
-                   schedule: str = "gpipe") -> Tuple[bool, Optional[str]]:
-    """True memory check (GPipe holds all in-flight microbatch activations
-    on stage 0 — the failure mode the paper reports for EdgeShard)."""
-    for idx, (d, used) in enumerate(plan.per_device_memory.items()):
-        if used > topo.devices[d].memory:
-            return False, (f"device {d} ({topo.devices[d].name}) needs "
-                           f"{used / 1e9:.1f} GB > {topo.devices[d].memory / 1e9:.1f} GB")
-    return True, None
-
-
-# ----------------------------------------------------------------------------
-# EdgeShard — pipeline-only, even layer split, memory-oblivious
-# ----------------------------------------------------------------------------
-def edgeshard_plan(graph: ModelGraph, topo: Topology, wl: Workload,
-                   n_stages: Optional[int] = None) -> ParallelismPlan:
-    g = graph.compress(0.02)
-    order = _chain_nodes(g)
-    S = n_stages or topo.n
-    S = min(S, len(order))
-    sizes = [len(order) // S + (1 if i < len(order) % S else 0) for i in range(S)]
-    groups, i = [], 0
-    for sz in sizes:
-        groups.append(order[i:i + sz])
-        i += sz
-    devs = [[d] for d in range(topo.n)][:S]
-    # EdgeShard uses GPipe-style all-forward-then-backward microbatching:
-    # stage 0 accumulates every in-flight activation.
-    plan = _make_plan(g, topo, wl, LATENCY_ONLY, groups, devs,
-                      schedule="gpipe")
-    plan.meta["planner"] = "edgeshard"
-    plan.meta["graph"] = g
-    ok, why = plan_memory_ok(plan, topo)
-    if not ok:
-        raise BaselineError(f"EdgeShard plan OOM: {why}")
-    return plan
-
-
-# ----------------------------------------------------------------------------
-# Asteroid — hybrid PP+DP, throughput-optimal under idealized D2D links
-# ----------------------------------------------------------------------------
-def _mb_sweep(wl: Workload) -> Tuple[int, ...]:
-    """Microbatch candidates every planner may tune over."""
-    out = {wl.microbatch_size} | {m for m in (1, 2, 4, 8, 16)
-                                  if wl.global_batch % m == 0}
-    return tuple(sorted(out))
-
-
-def _zero_latency(topo: Topology) -> Topology:
-    """The cited planners model link *bandwidth* only — per-message MAC/
-    RTT latency is absent from their cost models."""
-    res = [dataclasses.replace(r, latency=0.0) for r in topo.resources.values()]
-    return Topology(topo.devices, res, topo._p2p)
-
-
-def asteroid_plan(graph: ModelGraph, topo: Topology, wl: Workload,
-                  top_k: int = 1) -> ParallelismPlan:
-    cfg = PartitionerConfig(top_k=max(top_k, 1), delta=0.05,
-                            microbatch_sizes=_mb_sweep(wl),
-                            objective_mode="throughput")
-    ideal_topo = _zero_latency(topo)      # idealized D2D view (§2.2, Fig. 2)
-    part = ModelPartitioner(graph, ideal_topo, LATENCY_ONLY, cfg)
-    cands = part.plan(wl)
-    if not cands:
-        raise BaselineError("Asteroid found no feasible plan")
-    best = cands[0]
-    best.meta["planner"] = "asteroid"
-    best.meta["graph"] = part.graph
-    return best
-
-
-# ----------------------------------------------------------------------------
-# Alpa — homogeneous-cluster automation (mean device, uniform bandwidth)
-# ----------------------------------------------------------------------------
-def _homogenized(topo: Topology) -> Topology:
-    mean_flops = sum(d.flops for d in topo.devices) / topo.n
-    mean_mem = sum(d.memory for d in topo.devices) / topo.n
-    mean_eff = sum(d.compute_efficiency for d in topo.devices) / topo.n
-    devs = [dataclasses.replace(d, flops=mean_flops, memory=mean_mem,
-                                compute_efficiency=mean_eff)
-            for d in topo.devices]
-    return _uniform_net(devs, topo)
-
-
-def _uniform_net(devs: Sequence[DeviceProfile], topo: Topology) -> Topology:
-    """Every pair gets a dedicated link at the mean peak bandwidth —
-    the 'uniform contention-free D2D' network model."""
-    n = len(devs)
-    caps = [topo.peak_bandwidth(i, j) for i in range(n) for j in range(n) if i != j]
-    mean_bw = sum(caps) / len(caps) if caps else math.inf
-    resources, p2p = [], {}
-    for i in range(n):
-        for j in range(i + 1, n):
-            name = f"u{i}-{j}"
-            resources.append(LinkResource(name, mean_bw, frozenset((i, j)),
-                                          shared=False))
-            p2p[(i, j)] = [name]
-            p2p[(j, i)] = [name]
-    return Topology(list(devs), resources, p2p)
-
-
-def alpa_plan(graph: ModelGraph, topo: Topology, wl: Workload) -> ParallelismPlan:
-    homo = _homogenized(topo)
-    cfg = PartitionerConfig(top_k=1, delta=0.05,
-                            microbatch_sizes=_mb_sweep(wl),
-                            objective_mode="throughput")
-    part = ModelPartitioner(graph, homo, LATENCY_ONLY, cfg)
-    cands = part.plan(wl)
-    if not cands:
-        raise BaselineError("Alpa found no feasible plan")
-    ideal = cands[0]
-    # map back onto the REAL devices with a UNIFORM microbatch split (the
-    # homogeneity assumption) and reprice under true speeds
-    groups = [list(s.node_ids) for s in ideal.stages]
-    dev_groups = [list(s.devices) for s in ideal.stages]
-    wl = dataclasses.replace(wl, microbatch_size=ideal.microbatch_size)
-    plan = _make_plan(part.graph, topo, wl, LATENCY_ONLY, groups, dev_groups,
-                      uniform_split=True)
-    plan.meta["planner"] = "alpa"
-    plan.meta["graph"] = part.graph
-    return plan
-
-
-# ----------------------------------------------------------------------------
-# Metis — heterogeneity-aware compute balance, uniform network model
-# ----------------------------------------------------------------------------
-def metis_plan(graph: ModelGraph, topo: Topology, wl: Workload) -> ParallelismPlan:
-    uniform = _uniform_net(topo.devices, topo)
-    cfg = PartitionerConfig(top_k=1, delta=0.05,
-                            microbatch_sizes=_mb_sweep(wl),
-                            objective_mode="throughput")
-    part = ModelPartitioner(graph, uniform, LATENCY_ONLY, cfg)
-    cands = part.plan(wl)
-    if not cands:
-        raise BaselineError("Metis found no feasible plan")
-    ideal = cands[0]
-    groups = [list(s.node_ids) for s in ideal.stages]
-    dev_groups = [list(s.devices) for s in ideal.stages]
-    wl = dataclasses.replace(wl, microbatch_size=ideal.microbatch_size)
-    plan = _make_plan(part.graph, topo, wl, LATENCY_ONLY, groups, dev_groups)
-    plan.meta["planner"] = "metis"
-    plan.meta["graph"] = part.graph
-    return plan
-
-
-# ----------------------------------------------------------------------------
-# Brute-force optimal (small settings; Fig. 2's "Optimal")
-# ----------------------------------------------------------------------------
-def _ordered_groupings(devices: List[int], n_groups: int
-                       ) -> Iterable[List[List[int]]]:
-    """Ordered partitions of a *speed-sorted* device list into contiguous
-    groups (sufficient in practice: an optimal stage never benefits from
-    pairing the fastest and slowest device when a middle one is free)."""
-    for sizes in _contiguous_splits(len(devices), n_groups):
-        out, i = [], 0
-        for sz in sizes:
-            out.append(devices[i:i + sz])
-            i += sz
-        yield out
-
-
-def brute_force_optimal(graph: ModelGraph, topo: Topology, wl: Workload,
-                        evaluate, max_stages: Optional[int] = None,
-                        delta: float = 0.08, shortlist: int = 300
-                        ) -> ParallelismPlan:
-    """Exhaustive two-phase search ("Optimal" in Fig. 2).
-
-    Enumerates (contiguous stage splits × ordered device groupings over
-    speed-sorted devices), ranks all candidates by the cheap analytic
-    latency, then REAL-evaluates the best ``shortlist`` with
-    ``evaluate(plan) -> float`` (the contention-aware simulator) and
-    returns the true winner.
-    """
-    g = graph.compress(delta)
-    order = _chain_nodes(g)
-    cands: List[ParallelismPlan] = []
-    by_speed = sorted(range(topo.n),
-                      key=lambda d: topo.devices[d].effective_flops(), reverse=True)
-    dev_orders = [by_speed, list(reversed(by_speed))]
-    S_cap = min(max_stages or topo.n, len(order), topo.n)
-    for S in range(1, S_cap + 1):
-        for sizes in _contiguous_splits(len(order), S):
-            groups, i = [], 0
-            for sz in sizes:
-                groups.append(order[i:i + sz])
-                i += sz
-            seen_dg = set()
-            for dev_order in dev_orders:
-                for dgs in _ordered_groupings(dev_order, S):
-                    key = tuple(tuple(sorted(dg)) for dg in dgs)
-                    if key in seen_dg:
-                        continue
-                    seen_dg.add(key)
-                    try:
-                        plan = _make_plan(g, topo, wl, LATENCY_ONLY,
-                                          groups, dgs)
-                    except Exception:
-                        continue
-                    ok, _ = plan_memory_ok(plan, topo)
-                    if not ok:
-                        continue
-                    plan.meta["graph"] = g
-                    cands.append(plan)
-    if not cands:
-        raise BaselineError("brute force found no feasible plan")
-    cands.sort(key=lambda p: p.latency)          # cheap analytic rank
-    best: Optional[ParallelismPlan] = None
-    best_lat = math.inf
-    for plan in cands[:shortlist]:
-        lat = evaluate(plan)
-        if lat < best_lat:
-            best_lat = lat
-            plan.latency = lat
-            plan.meta["planner"] = "optimal"
-            best = plan
-    assert best is not None
-    return best
+__all__ = [
+    "LATENCY_ONLY", "BaselineError", "alpa_plan", "asteroid_plan",
+    "brute_force_optimal", "edgeshard_plan", "metis_plan",
+    "plan_memory_ok", "reprice_stage",
+]

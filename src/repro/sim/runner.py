@@ -8,23 +8,24 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
-from ..core.adapter import AdapterConfig
 from ..core.cost_model import Workload
 from ..core.device import Topology
 from ..core.graph_builders import paper_model
-from ..core.planner import DoraPlanner, PlanningResult
+from ..core.planner import PlanningResult
 from ..core.planning_graph import ModelGraph
 from ..core.plans import ParallelismPlan
 from ..core.qoe import QoESpec
 from ..core.scheduler import NetworkScheduler, SchedulerConfig
 from ..scenarios import PAPER_SETTINGS, get_scenario
-from .baselines import (BaselineError, alpa_plan, asteroid_plan,
-                        edgeshard_plan, metis_plan)
+from ..strategies import StrategyError, get_strategy
 
 SETTINGS = PAPER_SETTINGS
 PAPER_MODELS = ("bert", "qwen3-0.6b", "qwen3-1.7b", "qwen-omni")
+
+#: Fig. 8/9 comparison set — resolved through the strategy registry.
+COMPARISON_PLANNERS = ("edgeshard", "alpa", "metis", "asteroid", "dora")
 
 
 @dataclasses.dataclass
@@ -39,6 +40,14 @@ class ExecResult:
     @property
     def ok(self) -> bool:
         return self.error is None
+
+    @property
+    def failure_label(self) -> str:
+        """Short table cell for a failed run: the paper's OOM finding vs
+        an unexpected strategy bug."""
+        if self.error is None:
+            return ""
+        return "OOM" if "OOM" in self.error else "ERR"
 
 
 def workload_for(mode: str, global_batch: int = 32,
@@ -76,63 +85,48 @@ def execute_plan(plan: ParallelismPlan, topo: Topology, qoe: QoESpec,
                                bandwidth_scale=bandwidth_scale)
 
 
-def _mb_candidates(global_batch: int, base: int) -> Tuple[int, ...]:
-    cands = {base} | {m for m in (1, 2, 4, 8, 16) if global_batch % m == 0}
-    return tuple(sorted(cands))
-
-
 def dora_plan(graph: ModelGraph, topo: Topology, qoe: QoESpec, wl: Workload,
               top_k: int = 10,
               scheduler_config: Optional[SchedulerConfig] = None
               ) -> PlanningResult:
-    from ..core.partitioner import PartitionerConfig
-    pcfg = PartitionerConfig(
-        top_k=top_k,
-        microbatch_sizes=_mb_candidates(wl.global_batch, wl.microbatch_size))
-    planner = DoraPlanner(graph, topo, qoe, partitioner_config=pcfg,
-                          scheduler_config=scheduler_config)
-    return planner.plan(wl)
+    strat = get_strategy("dora", top_k=top_k, sweep_microbatch=True,
+                         scheduler_config=scheduler_config)
+    return strat.plan(graph, topo, qoe, wl)
 
 
-def _run_baseline(name: str, fn: Callable[[], ParallelismPlan],
-                  topo: Topology, qoe: QoESpec) -> ExecResult:
+def run_strategy(name: str, graph: ModelGraph, topo: Topology, wl: Workload,
+                 qoe: QoESpec, **params) -> ExecResult:
+    """Resolve one registered strategy and wrap its outcome (errors are a
+    result, not an exception — a failing baseline is the finding)."""
+    strat = get_strategy(name, **params)
     t0 = time.perf_counter()
     try:
-        plan = fn()
-    except BaselineError as e:
+        res = strat.plan(graph, topo, qoe, wl)
+    except StrategyError as e:         # expected planner failure (e.g. OOM)
         return ExecResult(planner=name, error=str(e),
                           plan_seconds=time.perf_counter() - t0)
-    t_plan = time.perf_counter() - t0
-    executed = execute_plan(plan, topo, qoe, scheduled=False)
-    return ExecResult(planner=name, latency=executed.latency,
-                      energy=executed.energy, plan=executed,
-                      plan_seconds=t_plan)
+    except Exception as e:  # noqa: BLE001 — keep comparing, but mark as a bug
+        return ExecResult(planner=name, error=f"{type(e).__name__}: {e}",
+                          plan_seconds=time.perf_counter() - t0)
+    return ExecResult(planner=name, latency=res.best.latency,
+                      energy=res.best.energy, plan=res.best,
+                      plan_seconds=res.total_s)
 
 
 def compare_planners(graph: ModelGraph, topo: Topology, wl: Workload,
-                     qoe: Optional[QoESpec] = None, top_k: int = 10
+                     qoe: Optional[QoESpec] = None, top_k: int = 10,
+                     planners: Sequence[str] = COMPARISON_PLANNERS
                      ) -> Dict[str, ExecResult]:
-    """Fig. 8/9 harness: every planner on one (model, setting, workload)."""
+    """Fig. 8/9 harness: every planner on one (model, setting, workload).
+
+    All planners resolve through the strategy registry; ``dora`` gets the
+    richer ``top_k``/microbatch-sweep search the benchmarks use."""
     qoe = qoe or QoESpec(t_qoe=0.0, lam=1e15)   # latency-optimized comparison
     out: Dict[str, ExecResult] = {}
-    out["edgeshard"] = _run_baseline(
-        "edgeshard", lambda: edgeshard_plan(graph, topo, wl), topo, qoe)
-    out["asteroid"] = _run_baseline(
-        "asteroid", lambda: asteroid_plan(graph, topo, wl), topo, qoe)
-    out["alpa"] = _run_baseline(
-        "alpa", lambda: alpa_plan(graph, topo, wl), topo, qoe)
-    out["metis"] = _run_baseline(
-        "metis", lambda: metis_plan(graph, topo, wl), topo, qoe)
-    t0 = time.perf_counter()
-    try:
-        res = dora_plan(graph, topo, qoe, wl, top_k=top_k)
-        best = res.best
-        out["dora"] = ExecResult(planner="dora", latency=best.latency,
-                                 energy=best.energy, plan=best,
-                                 plan_seconds=res.total_s)
-    except Exception as e:  # noqa: BLE001
-        out["dora"] = ExecResult(planner="dora", error=str(e),
-                                 plan_seconds=time.perf_counter() - t0)
+    for name in planners:
+        params = (dict(top_k=top_k, sweep_microbatch=True)
+                  if name == "dora" else {})
+        out[name] = run_strategy(name, graph, topo, wl, qoe, **params)
     return out
 
 

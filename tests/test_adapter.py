@@ -41,6 +41,27 @@ def test_pareto_filter_property(pts):
                    for f in front)
 
 
+def test_pareto_filter_ties_deterministic():
+    """Identical-latency plans: exactly one survives per latency value,
+    strictly-better energy always survives, and the result is the same
+    for every input order (strict-with-tiebreak domination)."""
+    a = _plan(1.0, 5.0)
+    b = _plan(1.0, 3.0)          # dominates a (same latency, less energy)
+    c = _plan(1.0, 3.0 - 1e-15)  # strictly better than b by a hair
+    d = _plan(2.0, 3.0 - 1e-15)  # dominated-with-tie by c (worse latency)
+    import itertools
+    fronts = []
+    for perm in itertools.permutations([a, b, c, d]):
+        front = pareto_filter(list(perm))
+        fronts.append([(p.latency, p.energy) for p in front])
+    assert all(f == fronts[0] for f in fronts)       # order-independent
+    assert fronts[0] == [(1.0, 3.0 - 1e-15)]         # only the best survives
+    # exact (latency, energy) ties collapse to one representative
+    twin = _plan(1.0, 3.0)
+    front = pareto_filter([b, twin])
+    assert len(front) == 1
+
+
 @pytest.fixture(scope="module")
 def adapter():
     topo = make_setting("smart_home_2")
