@@ -7,7 +7,7 @@ switches to the per-condition optimum instantly at zero cost.
 """
 from __future__ import annotations
 
-from .common import Claim, table
+from .common import QUICK, Claim, table
 
 from repro.core.adapter import DynamicsEvent, RuntimeAdapter
 from repro.core.qoe import QoESpec
@@ -16,6 +16,7 @@ from repro.sim.runner import dora_plan, scenario_case
 from repro.strategies import get_strategy
 
 LAT = QoESpec(t_qoe=0.0, lam=1e15)
+MODEL = "qwen3-0.6b" if QUICK else "qwen3-1.7b"
 
 PHASES = [
     ("baseline", DynamicsEvent(t=0.0)),
@@ -28,7 +29,7 @@ PHASES = [
 
 
 def run(report) -> None:
-    topo, graph, wl = scenario_case("smart_home_2", model="qwen3-1.7b",
+    topo, graph, wl = scenario_case("smart_home_2", model=MODEL,
                                     mode="infer")
     sched = NetworkScheduler(topo, LAT)
 
@@ -69,3 +70,12 @@ def run(report) -> None:
                "network-only rescheduling)")
     c2.check(max(react_times) < 5.0, f"max react {max(react_times):.2f}s")
     report.add_claims([c1, c2])
+
+
+if __name__ == "__main__":
+    import sys
+
+    from .run import Report
+    r = Report()
+    run(r)
+    sys.exit(0 if all(c.ok for c in r.claims) else 1)

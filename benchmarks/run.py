@@ -26,6 +26,7 @@ HARNESSES = [
     "fig14_breakdown",
     "fig15_pareto",
     "fig16_dynamics",
+    "fig_serving",
     "fig17_topk",
     "table4_planning_time",
     "roofline",

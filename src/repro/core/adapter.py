@@ -33,16 +33,63 @@ from .scheduler import NetworkScheduler
 # -- dynamics events ------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class DynamicsEvent:
-    """A runtime condition change at ``t`` (seconds)."""
+    """A runtime condition change at ``t`` (seconds).
+
+    ``compute_speed``/``bandwidth_scale`` are *absolute* multipliers vs
+    nominal (0.5 = half speed), keyed by device index / resource name.
+    ``leave``/``join`` are fleet churn: device indices (of the original
+    deployment topology) that drop out of or rejoin the fleet at ``t``.
+    Churn always forces a full replan — the plan's device set changed.
+    """
 
     t: float
     compute_speed: Dict[str, float] = dataclasses.field(default_factory=dict)
     bandwidth_scale: Dict[str, float] = dataclasses.field(default_factory=dict)
+    leave: Tuple[int, ...] = ()
+    join: Tuple[int, ...] = ()
+
+    @property
+    def is_churn(self) -> bool:
+        return bool(self.leave or self.join)
 
     def magnitude(self) -> float:
+        if self.is_churn:
+            return math.inf
         devs = [abs(1.0 - v) for v in self.compute_speed.values()]
         bws = [abs(1.0 - v) for v in self.bandwidth_scale.values()]
         return max(devs + bws + [0.0])
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeState:
+    """Accumulated runtime conditions: the merge of every event so far.
+
+    Events are deltas against *nominal*, not against each other — a
+    bandwidth drop at t=10 stays in force when a compute-speed event
+    arrives at t=20. ``apply`` folds one more event in;
+    ``delta`` measures how far an event moves conditions from this
+    accumulated state (the §4.3 fluctuation-threshold input).
+    """
+
+    compute_speed: Dict[int, float] = dataclasses.field(default_factory=dict)
+    bandwidth_scale: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def apply(self, event: DynamicsEvent) -> "RuntimeState":
+        speed = dict(self.compute_speed)
+        speed.update(event.compute_speed)
+        bw = dict(self.bandwidth_scale)
+        bw.update(event.bandwidth_scale)
+        return RuntimeState(compute_speed=speed, bandwidth_scale=bw)
+
+    def delta(self, event: DynamicsEvent) -> float:
+        """Largest shift ``event`` causes relative to this state."""
+        if event.is_churn:
+            return math.inf
+        shifts = [abs(self.compute_speed.get(k, 1.0) - v)
+                  for k, v in event.compute_speed.items()]
+        shifts += [abs(self.bandwidth_scale.get(k, 1.0) - v)
+                   for k, v in event.bandwidth_scale.items()]
+        return max(shifts + [0.0])
 
 
 @dataclasses.dataclass
@@ -206,13 +253,42 @@ class RuntimeAdapter:
 
     # -- continuous-workload path (Fig. 16) ------------------------------------------
     def on_dynamics(self, current: ParallelismPlan, event: DynamicsEvent,
-                    replan_fn: Optional[Callable[[], Sequence[ParallelismPlan]]] = None
+                    replan_fn: Optional[Callable[[], Sequence[ParallelismPlan]]] = None,
+                    state: Optional[RuntimeState] = None
                     ) -> Tuple[ParallelismPlan, str, float]:
-        """React to one runtime event. Returns (plan, action, react_seconds)."""
+        """React to one runtime event. Returns (plan, action, react_seconds).
+
+        ``state`` carries the conditions accumulated from *earlier*
+        events; the event is merged into it so a bandwidth drop at t=10
+        is still in force when a compute-speed event arrives at t=20.
+        Without ``state`` the event is taken as the complete picture
+        (the legacy single-event behavior). The fluctuation threshold
+        compares the event against the accumulated state, not nominal.
+        """
+        prior = state if state is not None else RuntimeState()
+        return self.react(current, prior.apply(event), prior.delta(event),
+                          replan_fn)
+
+    def react(self, current: ParallelismPlan, conditions: RuntimeState,
+              magnitude: float,
+              replan_fn: Optional[Callable[[], Sequence[ParallelismPlan]]] = None
+              ) -> Tuple[ParallelismPlan, str, float]:
+        """Adapt to the *merged* runtime conditions.
+
+        Small shifts (``magnitude`` ≤ threshold) re-run only the Phase-2
+        scheduler on the current plan. Large shifts replan: every fresh
+        candidate is priced under the merged conditions **with its
+        migration stall amortized into the choice** — the stall is pure
+        QoE-violation seconds spread over the requests one adaptation
+        horizon serves, charged at λ like any other violation (Eq. 2).
+        Keeping the (rescheduled) current plan costs no stall and wins
+        whenever no candidate's gain covers its own migration; the
+        returned plan's ``meta["switch_stall_s"]`` is then 0.
+        """
         t0 = time.perf_counter()
-        speed = dict(event.compute_speed)
-        bwsc = dict(event.bandwidth_scale)
-        if event.magnitude() <= self.config.fluctuation_threshold or replan_fn is None:
+        speed = dict(conditions.compute_speed)
+        bwsc = dict(conditions.bandwidth_scale)
+        if magnitude <= self.config.fluctuation_threshold or replan_fn is None:
             refined = self.scheduler.refine(current, compute_speed=speed,
                                             bandwidth_scale=bwsc)
             return refined, "reschedule", time.perf_counter() - t0
@@ -220,12 +296,22 @@ class RuntimeAdapter:
         fresh = list(replan_fn())
         refined = [self.scheduler.refine(p, compute_speed=speed,
                                          bandwidth_scale=bwsc) for p in fresh]
-        refined.sort(key=lambda p: p.objective)
-        new = refined[0]
-        stall = self.switch_cost(current, new)
-        new.meta["switch_stall_s"] = stall
-        self.plans = pareto_filter(refined)
-        return new, "replan", time.perf_counter() - t0
+        kept = self.scheduler.refine(current, compute_speed=speed,
+                                     bandwidth_scale=bwsc)
+        horizon = max(self.config.horizon_s, 1e-9)
+
+        def amortized(p: ParallelismPlan, stall: float) -> float:
+            return p.objective + self.qoe.lam * stall * (p.latency / horizon)
+
+        best, best_score, best_stall = kept, amortized(kept, 0.0), 0.0
+        for p in refined:
+            stall = self.switch_cost(current, p)
+            score = amortized(p, stall)
+            if score < best_score - 1e-12:
+                best, best_score, best_stall = p, score, stall
+        best.meta["switch_stall_s"] = best_stall
+        self.plans = pareto_filter(refined + [kept])
+        return best, "replan", time.perf_counter() - t0
 
     # -- helpers -----------------------------------------------------------------------
     def _refresh_plans(self, speed: Dict[str, float], bw: Dict[str, float]) -> None:

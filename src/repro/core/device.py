@@ -157,6 +157,90 @@ class Topology:
     def n(self) -> int:
         return len(self.devices)
 
+    # -- churn (runtime join/leave) --------------------------------------------
+    def subset(self, keep: Sequence[int]
+               ) -> Tuple["Topology", Dict[int, int]]:
+        """The surviving fleet after devices leave (or rejoin).
+
+        ``keep`` — indices *of this topology* that remain. Returns the
+        shrunk topology (devices re-indexed ``0..len(keep)-1`` in sorted
+        order) plus the old→new index mapping. Link resources keep their
+        names (so accumulated ``bandwidth_scale`` entries stay valid)
+        but drop departed members; resources left with fewer than two
+        members disappear. Explicit routes that traversed a dropped
+        resource are re-derived over the surviving links (ring fleets:
+        traffic hops the other way around the departed node); a pair
+        covered by a surviving shared medium needs no explicit route.
+        Raises ``ValueError`` if the surviving fleet is disconnected.
+        """
+        uniq = sorted(set(keep))
+        if not uniq:
+            raise ValueError("subset needs at least one device")
+        bad = [k for k in uniq if not (0 <= k < self.n)]
+        if bad:
+            raise ValueError(f"unknown device indices {bad} (fleet has "
+                             f"{self.n} devices)")
+        mapping = {old: new for new, old in enumerate(uniq)}
+        devices = [self.devices[i] for i in uniq]
+        resources: List[LinkResource] = []
+        for r in self.resources.values():
+            members = frozenset(mapping[m] for m in r.members if m in mapping)
+            if len(members) >= 2:
+                resources.append(dataclasses.replace(r, members=members))
+        alive = {r.name for r in resources}
+        p2p: Dict[Tuple[int, int], List[str]] = {}
+        for (i, j), names in self._p2p.items():
+            if i in mapping and j in mapping and all(n in alive for n in names):
+                p2p[(mapping[i], mapping[j])] = list(names)
+        # re-route pairs whose explicit route died with a departed device
+        adj: Dict[int, Dict[int, str]] = {}
+        for r in resources:
+            for a in r.members:
+                for b in r.members:
+                    if a != b:
+                        adj.setdefault(a, {}).setdefault(b, r.name)
+        for i in range(len(devices)):
+            for j in range(len(devices)):
+                if i == j or (i, j) in p2p:
+                    continue
+                if any(r.shared and i in r.members and j in r.members
+                       for r in resources):
+                    continue        # resources_between falls back to it
+                route = _shortest_route(adj, i, j)
+                if route is None:
+                    raise ValueError(
+                        f"subset disconnects devices {uniq[i]} and "
+                        f"{uniq[j]}: no surviving link or shared medium "
+                        f"joins them")
+                p2p[(i, j)] = route
+        return Topology(devices, resources, p2p), mapping
+
+
+def _shortest_route(adj: Dict[int, Dict[int, str]], src: int, dst: int
+                    ) -> Optional[List[str]]:
+    """BFS over link adjacency: the resource names a transfer traverses
+    on a fewest-hops path src→dst, or ``None`` if disconnected."""
+    prev: Dict[int, Tuple[int, str]] = {}
+    frontier = [src]
+    seen = {src}
+    while frontier and dst not in seen:
+        nxt: List[int] = []
+        for a in frontier:
+            for b, link in adj.get(a, {}).items():
+                if b not in seen:
+                    seen.add(b)
+                    prev[b] = (a, link)
+                    nxt.append(b)
+        frontier = nxt
+    if dst not in prev and dst != src:
+        return None
+    route: List[str] = []
+    cur = dst
+    while cur != src:
+        cur, link = prev[cur]
+        route.append(link)
+    return list(reversed(route))
+
 
 def _ring_link_name(name: str, a: int, b: int, n: int) -> str:
     """Canonical name of the ring link between neighbours a and b."""

@@ -52,6 +52,15 @@ class ScheduleResult:
             return 0.0
         return self.resource_busy.get(name, self.device_busy.get(name, 0.0)) / self.makespan
 
+    def busy_seconds(self, name: str) -> float:
+        """Busy seconds of a resource or executor within the makespan."""
+        return self.resource_busy.get(name, self.device_busy.get(name, 0.0))
+
+    def idle_seconds(self, name: str) -> float:
+        """Seconds ``name`` sat idle inside this schedule's makespan
+        (the serving simulator's per-device idle-draw input)."""
+        return max(self.makespan - self.busy_seconds(name), 0.0)
+
 
 class EventEngine:
     def __init__(self, tasks: Sequence[Task], resource_caps: Dict[str, float],

@@ -47,3 +47,25 @@ class QoESpec:
         if self.e_qoe is None:
             return True
         return all(e <= self.e_qoe for e in per_device_energy.values())
+
+    def satisfied(self, plan,
+                  device_memory: Optional[Dict[int, float]] = None) -> bool:
+        """Full QoE verdict for one evaluated ``ParallelismPlan``: the
+        latency target AND the per-device energy budget AND (when a cap
+        applies) per-device memory — a plan that blows its energy budget
+        does not "meet QoE" just because it is fast. ``device_memory``
+        optionally supplies hardware memory caps; without it, memory is
+        checked against ``m_qoe`` alone (the planner already enforces
+        hardware caps at construction time).
+        """
+        if plan.latency > self.t_qoe:
+            return False
+        if not self.feasible_energy(plan.per_device_energy):
+            return False
+        caps = device_memory
+        if caps is None and self.m_qoe is not None:
+            caps = {d: math.inf for d in plan.per_device_memory}
+        if caps is not None and not self.feasible_memory(plan.per_device_memory,
+                                                        caps):
+            return False
+        return True

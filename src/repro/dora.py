@@ -45,7 +45,8 @@ import math
 import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from .core.adapter import AdapterConfig, DynamicsEvent, RuntimeAdapter
+from .core.adapter import (AdapterConfig, DynamicsEvent, RuntimeAdapter,
+                           RuntimeState)
 from .core.cost_model import CostProvider, Workload
 from .core.device import Topology
 from .core.partitioner import PartitionerConfig
@@ -130,7 +131,8 @@ class PlanReport:
 
     @property
     def meets_qoe(self) -> bool:
-        return self.result.best.latency <= self.qoe.t_qoe
+        """Full QoE verdict (latency target AND energy/memory budgets)."""
+        return self.qoe.satisfied(self.result.best)
 
     @property
     def planning_seconds(self) -> float:
@@ -308,7 +310,7 @@ class ComparisonReport:
 
     def meets_qoe(self, name: str) -> bool:
         out = self.outcomes[name]
-        return out.ok and out.latency <= self.qoe.t_qoe
+        return out.ok and self.qoe.satisfied(out.result.best)
 
     def speedup(self, name: str) -> float:
         """How many times faster the reference is than ``name``
@@ -439,13 +441,79 @@ def compare(scenario: ScenarioRef,
                             outcomes=outcomes)
 
 
+def _remap_plan(plan: ParallelismPlan,
+                mapping: Dict[int, int]) -> Optional[ParallelismPlan]:
+    """Project a plan into a re-indexed fleet (for delta-switch pricing
+    across churn): stages keep only surviving devices, re-numbered via
+    ``mapping``. Returns ``None`` when no stage survives at all."""
+    stages = []
+    for s in plan.stages:
+        devs = [mapping[d] for d in s.devices if d in mapping]
+        if not devs:
+            continue
+        split = {mapping[d]: s.microbatch_split[d]
+                 for d in s.devices if d in mapping}
+        stages.append(dataclasses.replace(s, devices=devs,
+                                          microbatch_split=split))
+    if not stages:
+        return None
+    return dataclasses.replace(plan, stages=stages)
+
+
 @dataclasses.dataclass
 class ServeSession:
-    """A planned deployment with its runtime adapter armed (§4.3)."""
+    """A planned deployment with its runtime adapter armed (§4.3).
+
+    The session carries the *cumulative* runtime picture across events:
+
+    * ``state`` — the merge of every ``DynamicsEvent`` so far (a
+      bandwidth drop at t=10 stays in force when a compute-speed event
+      arrives at t=20); every adapter reaction sees the merged state.
+    * ``active`` — which devices of the original deployment topology
+      are currently in the fleet; ``leave``/``join`` churn events
+      shrink/grow it and force a full replan on the surviving fleet
+      (``Topology.subset``), with the migration stall priced by the
+      adapter's delta-switching model.
+    * ``plans`` — the current candidate pool replanning draws from
+      (the planner's candidates, refreshed on churn).
+
+    ``current`` (and the plans in ``plans``) are indexed in the *active*
+    fleet's device space; ``active[i]`` maps stage device ``i`` back to
+    the original topology index.
+    """
 
     report: PlanReport
     adapter: RuntimeAdapter
     current: ParallelismPlan
+    state: RuntimeState = dataclasses.field(default_factory=RuntimeState)
+    active: Tuple[int, ...] = ()
+    plans: List[ParallelismPlan] = dataclasses.field(default_factory=list)
+    # planner knobs carried across churn replans (report.topology is
+    # already cost-calibrated, so churn planners must NOT re-apply a
+    # CostProvider — only the search/scheduler configs carry over)
+    partitioner_config: Optional[PartitionerConfig] = None
+    scheduler_config: Optional[SchedulerConfig] = None
+
+    def __post_init__(self) -> None:
+        if not self.active:
+            self.active = tuple(range(self.report.topology.n))
+        if not self.plans:
+            self.plans = list(self.report.candidates)
+
+    def _translate(self, state: RuntimeState) -> RuntimeState:
+        """Original-index conditions → active-fleet index space.
+        Bandwidth entries for links that left with their devices are
+        filtered out (they come back into force on rejoin)."""
+        if self.active == tuple(range(self.report.topology.n)):
+            return state
+        mapping = {orig: pos for pos, orig in enumerate(self.active)}
+        alive = self.adapter.topo.resources
+        return RuntimeState(
+            compute_speed={mapping[d]: v
+                           for d, v in state.compute_speed.items()
+                           if d in mapping},
+            bandwidth_scale={k: v for k, v in state.bandwidth_scale.items()
+                             if k in alive})
 
     def on_dynamics(self, event: DynamicsEvent,
                     replan: bool = True) -> Tuple[ParallelismPlan, str, float]:
@@ -453,17 +521,89 @@ class ServeSession:
 
         Returns (new plan, action taken, reaction seconds).  ``replan``
         permits full replanning on large shifts; small fluctuations are
-        absorbed with network-only rescheduling either way.
+        absorbed with network-only rescheduling either way.  Device
+        ``leave``/``join`` churn always replans (the fleet changed).
+        The event is merged into the session's cumulative ``state``, so
+        successive partial events compound instead of overwriting each
+        other.
         """
-        replan_fn = (lambda: list(self.report.candidates)) if replan else None
-        new, action, react = self.adapter.on_dynamics(self.current, event,
-                                                      replan_fn=replan_fn)
+        if event.is_churn:
+            return self._on_churn(event)
+        prior = self.state
+        merged = prior.apply(event)
+        replan_fn = (lambda: list(self.plans)) if replan else None
+        new, action, react = self.adapter.react(
+            self.current, self._translate(merged), prior.delta(event),
+            replan_fn)
+        self.state = merged
         self.current = new
         return new, action, react
 
+    def _on_churn(self, event: DynamicsEvent
+                  ) -> Tuple[ParallelismPlan, str, float]:
+        """Devices left/joined: replan from scratch on the new fleet."""
+        t0 = time.perf_counter()
+        full = self.report.topology
+        bad = [d for d in (*event.leave, *event.join)
+               if not (0 <= d < full.n)]
+        if bad:
+            raise ValueError(f"churn references unknown devices {bad} "
+                             f"(deployment has {full.n})")
+        fleet = (set(self.active) - set(event.leave)) | set(event.join)
+        if not fleet:
+            raise ValueError("churn event would remove every device")
+        merged = self.state.apply(event)
+        keep = tuple(sorted(fleet))
+        sub, mapping = full.subset(keep)
+        # ``full`` is the session's calibrated topology, so the default
+        # (identity) cost provider is correct here — re-passing the
+        # original CostProvider would calibrate twice
+        planner = DoraPlanner(self.report.graph, sub, self.report.qoe,
+                              partitioner_config=self.partitioner_config,
+                              scheduler_config=self.scheduler_config,
+                              adapter_config=self.adapter.config)
+        result = planner.plan(self.report.workload)
+        adapter = planner.make_adapter(result)
+        new = result.best
+        cond = RuntimeState(
+            compute_speed={mapping[d]: v
+                           for d, v in merged.compute_speed.items()
+                           if d in mapping},
+            bandwidth_scale={k: v
+                             for k, v in merged.bandwidth_scale.items()
+                             if k in planner.topo.resources})
+        if cond.compute_speed or cond.bandwidth_scale:
+            new = adapter.scheduler.refine(
+                new, compute_speed=dict(cond.compute_speed),
+                bandwidth_scale=dict(cond.bandwidth_scale))
+        # migration stall: the old plan re-indexed into the new fleet
+        # prices delta switching (layers already resident stay put)
+        trans = {pos: mapping[orig] for pos, orig in enumerate(self.active)
+                 if orig in mapping}
+        proxy = _remap_plan(self.current, trans)
+        if proxy is not None:
+            stall = adapter.switch_cost(proxy, new)
+        else:   # nothing survives: cold-load the whole new plan
+            nbytes = max(new.device_param_bytes().values(), default=0.0)
+            bw = min((sub.peak_bandwidth(i, j)
+                      for i in new.devices for j in new.devices if i != j),
+                     default=math.inf)
+            load_t = nbytes / bw if bw != math.inf else 0.0
+            stall = adapter.config.switch_drain_s + load_t
+        new.meta["switch_stall_s"] = stall
+        new.meta["fleet"] = list(keep)
+        self.adapter = adapter
+        self.active = keep
+        self.state = merged
+        self.plans = list(result.candidates)
+        self.current = new
+        return new, "replan", time.perf_counter() - t0
+
     @property
     def meets_qoe(self) -> bool:
-        return self.current.latency <= self.report.qoe.t_qoe
+        """Full QoE verdict for the active plan: latency target AND
+        energy/memory budgets (``QoESpec.satisfied``)."""
+        return self.report.qoe.satisfied(self.current)
 
 
 def serve(scenario: ScenarioRef, **overrides) -> ServeSession:
@@ -474,7 +614,9 @@ def serve(scenario: ScenarioRef, **overrides) -> ServeSession:
                         graph=planner.graph, workload=wl, qoe=planner.qoe,
                         result=result)
     adapter = planner.make_adapter(result)
-    return ServeSession(report=report, adapter=adapter, current=result.best)
+    return ServeSession(report=report, adapter=adapter, current=result.best,
+                        partitioner_config=planner.partitioner.config,
+                        scheduler_config=planner.scheduler.config)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -526,7 +668,8 @@ def simulate(scenario: ScenarioRef,
              events: Optional[Sequence[TimelineItem]] = None,
              session: Optional[ServeSession] = None,
              copy: bool = False,
-             **overrides) -> SimulationTrace:
+             mode: str = "events",
+             **overrides) -> Union[SimulationTrace, "ServingTrace"]:
     """Replay a dynamics timeline through the runtime adapter.
 
     ``events`` defaults to the scenario's registered timeline; each item
@@ -536,15 +679,37 @@ def simulate(scenario: ScenarioRef,
     ``session`` (from ``dora.serve`` of the *same* scenario) to reuse
     its plan instead of re-running the planner.
 
+    ``mode="events"`` (default) replays the timeline event-by-event and
+    returns a :class:`SimulationTrace`.  ``mode="requests"`` runs the
+    request-level serving simulator (``repro.sim.serving``): open-loop
+    arrivals at the scenario's registered request rate queue through
+    the active plan's pipeline while the timeline (bandwidth/compute
+    shifts AND device join/leave churn) plays out; returns a
+    :class:`repro.sim.serving.ServingTrace` with p50/p95/p99 latency,
+    SLO attainment, per-device energy (idle draw included) and every
+    adapter action.  Extra knobs for that mode: ``load=`` (a
+    ``ServingLoad``), ``strategy=`` (simulate a non-adaptive baseline
+    strategy instead of dora's adapter).
+
     **Mutation contract:** replaying events *advances the session* —
-    ``session.current`` tracks the adapter's latest plan and the
-    adapter's internal Pareto set is re-evaluated under the final
-    event's conditions, exactly as a live deployment would be left.
-    Pass ``copy=True`` to deep-copy the session (adapter state
-    included) first and replay against the copy, leaving the caller's
-    session untouched; the returned trace then references the copy's
-    report.
+    ``session.current`` tracks the adapter's latest plan (after churn,
+    re-indexed to the surviving fleet with ``session.active`` mapping
+    back to original device ids) and the adapter's internal Pareto set
+    is re-evaluated under the final event's conditions, exactly as a
+    live deployment would be left.  Pass ``copy=True`` to deep-copy the
+    session (adapter state included) first and replay against the copy,
+    leaving the caller's session untouched; the returned trace then
+    references the copy's report.
     """
+    if mode == "requests":
+        from .sim.serving import simulate_requests
+        if copy and session is not None:
+            session = _copy.deepcopy(session)
+        return simulate_requests(scenario, events=events, session=session,
+                                 **overrides)
+    if mode != "events":
+        raise ValueError(f"unknown mode {mode!r}: expected 'events' or "
+                         f"'requests'")
     if session is None:
         session = serve(scenario, **overrides)
     else:
@@ -558,17 +723,11 @@ def simulate(scenario: ScenarioRef,
                              "pass them to dora.serve instead")
         if copy:
             session = _copy.deepcopy(session)
-    timeline: List[Tuple[str, DynamicsEvent]] = []
-    source: Sequence[TimelineItem] = (
+    from .sim.serving import normalize_timeline
+    timeline = normalize_timeline(
         events if events is not None else session.report.scenario.timeline)
-    for item in source:
-        if isinstance(item, DynamicsEvent):
-            timeline.append((f"event@t={item.t:g}s", item))
-        else:
-            label, ev = item
-            timeline.append((label, ev))
     steps: List[SimulationStep] = []
-    for label, ev in sorted(timeline, key=lambda kv: kv[1].t):
+    for label, ev in timeline:
         new, action, react = session.on_dynamics(ev)
         steps.append(SimulationStep(t=ev.t, label=label, action=action,
                                     react_seconds=react, latency=new.latency,
@@ -579,5 +738,5 @@ def simulate(scenario: ScenarioRef,
 __all__ = [
     "PlanReport", "ServeSession", "SimulationStep", "SimulationTrace",
     "StrategyOutcome", "ComparisonReport", "DEFAULT_COMPARISON",
-    "plan", "planner_for", "serve", "simulate", "compare",
+    "RuntimeState", "plan", "planner_for", "serve", "simulate", "compare",
 ]

@@ -60,6 +60,11 @@ class Scenario:
     # (label, event) pairs of runtime dynamics this deployment typically
     # experiences; ``dora.simulate`` replays them by default.
     timeline: Tuple[Tuple[str, DynamicsEvent], ...] = ()
+    # mean open-loop request rate (requests/sec) this deployment serves;
+    # drives the request-level simulator (``dora.simulate`` with
+    # ``mode="requests"``).  For training deployments one "request" is
+    # one iteration.  ``None`` → half the plan's service capacity.
+    request_rate: Optional[float] = None
 
     @property
     def mode(self) -> str:

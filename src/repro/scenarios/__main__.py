@@ -4,6 +4,7 @@
     PYTHONPATH=src python -m repro.scenarios --strategies
     PYTHONPATH=src python -m repro.scenarios --run smart_home_2
     PYTHONPATH=src python -m repro.scenarios --run all [--simulate]
+    PYTHONPATH=src python -m repro.scenarios --run traffic_monitor --requests
     PYTHONPATH=src python -m repro.scenarios --run smart_home_2 \
         --strategy chain_split
     PYTHONPATH=src python -m repro.scenarios --run smart_home_2 \
@@ -14,7 +15,10 @@ registry; ``--run`` plans the named scenario(s) through the
 ``repro.dora`` facade and prints each PlanReport; ``--strategy`` swaps
 the planner; ``--compare`` runs several strategies side by side;
 ``--simulate`` additionally replays each scenario's registered dynamics
-timeline through the runtime adapter; ``--json PATH`` writes everything
+timeline through the runtime adapter; ``--requests`` runs the
+request-level serving simulator (open-loop arrivals at the scenario's
+registered rate, timeline + churn included) and reports p50/p95/p99
+latency, SLO attainment and energy; ``--json PATH`` writes everything
 the run produced as one machine-readable artifact.
 """
 from __future__ import annotations
@@ -42,7 +46,7 @@ def _print_listing(tag: str = None) -> None:
 
 
 def _run(names: List[str], strategy: str, compare: Optional[Sequence[str]],
-         simulate: bool, json_path: Optional[str]) -> int:
+         simulate: bool, requests: bool, json_path: Optional[str]) -> int:
     failures = 0
     artifact: Dict[str, Dict[str, object]] = {}
     for name in names:
@@ -82,6 +86,20 @@ def _run(names: List[str], strategy: str, compare: Optional[Sequence[str]],
             continue
         print(report.summary())
         entry["plan"] = report.to_dict()
+        if requests:
+            print("\nrequest-level serving simulation:")
+            try:
+                # copy=True: a later --simulate must see a fresh session,
+                # and non-dora strategies reuse the plan already computed
+                trace = dora.simulate(sc, mode="requests", copy=True,
+                                      session=session, strategy=strategy,
+                                      report=None if session else report)
+                print(trace.summary())
+                entry["serving"] = trace.to_dict()
+            except Exception as e:  # noqa: BLE001 — keep sweeping
+                print(f"[ERROR] serving sim failed: {type(e).__name__}: {e}")
+                entry["serving_error"] = f"{type(e).__name__}: {e}"
+                failures += 1
         if simulate and sc.timeline:
             if session is None:
                 print("\n(--simulate needs the runtime adapter, which only "
@@ -120,6 +138,10 @@ def main(argv=None) -> int:
     ap.add_argument("--simulate", action="store_true",
                     help="with --run: also replay each scenario's dynamics "
                          "timeline through the runtime adapter")
+    ap.add_argument("--requests", action="store_true",
+                    help="with --run: request-level serving simulation at "
+                         "the scenario's registered request rate (p50/p95/"
+                         "p99 latency, SLO attainment, energy)")
     ap.add_argument("--json", default=None, metavar="PATH", dest="json_path",
                     help="with --run: write plans/comparisons/traces as one "
                          "machine-readable JSON artifact")
@@ -136,7 +158,7 @@ def main(argv=None) -> int:
     names = (list_scenarios(args.tag) if args.run == ["all"]
              else list(args.run))
     return _run(names, args.strategy, args.compare, args.simulate,
-                args.json_path)
+                args.requests, args.json_path)
 
 
 if __name__ == "__main__":

@@ -12,10 +12,14 @@ from .baselines import (BaselineError, alpa_plan, asteroid_plan,
 from .runner import (COMPARISON_PLANNERS, ExecResult, compare_planners,
                      dora_plan, execute_plan, run_strategy, scenario_case,
                      setting_and_graph, workload_for)
+from .serving import (AdapterAction, RequestRecord, ServingLoad, ServingTrace,
+                      poisson_arrivals, simulate_requests)
 
 __all__ = [
     "BaselineError", "alpa_plan", "asteroid_plan", "brute_force_optimal",
     "edgeshard_plan", "metis_plan", "COMPARISON_PLANNERS", "ExecResult",
     "compare_planners", "dora_plan", "execute_plan", "run_strategy",
     "scenario_case", "setting_and_graph", "workload_for",
+    "AdapterAction", "RequestRecord", "ServingLoad", "ServingTrace",
+    "poisson_arrivals", "simulate_requests",
 ]
