@@ -7,10 +7,11 @@ Phase-2 scheduler and the edge simulator both execute this graph.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
 
 from .device import Topology
-from .engine import Task
+from .engine import EventEngine, Task, chunk_comm_tasks, task_structure
 from .plans import ParallelismPlan
 
 
@@ -95,3 +96,129 @@ def build_cep(plan: ParallelismPlan, topo: Topology) -> List[Task]:
 
 def cep_resource_caps(topo: Topology) -> Dict[str, float]:
     return {name: r.capacity for name, r in topo.resources.items()}
+
+
+class CEPCache:
+    """Per-plan CEP reuse: build the task graph once, derive everything
+    else lazily and keep it.
+
+    One ``refine`` used to expand the same plan into the same CEP graph
+    and re-run ``assign_priorities`` up to 7 times (fair eval + every
+    chunk mode + the LP lower bound); the runtime adapter then repeated
+    all of it on every dynamics event.  This cache memoizes, per plan:
+
+    * the base (unchunked) task list — built once;
+    * each chunked variant (``chunk_comm_tasks`` clones of the cached
+      base tasks) and its dependency structure/topological order;
+    * the critical-path priority map per ``(chunks, caps)`` — priorities
+      depend on resource capacities (bandwidth-scale events) but not on
+      compute speed or comm mode.
+
+    ``engine`` hands back a ready-to-``run`` :class:`EventEngine` with
+    the cached structure and priorities applied.  Chunk counts ``w <= 1``
+    share the base task list (the fair/null schedule and the unchunked
+    scheduled search use the same graph).
+    """
+
+    def __init__(self, plan: ParallelismPlan, topo: Topology,
+                 shared_structs: Optional[Dict[tuple, tuple]] = None):
+        self.plan = plan
+        self.topo = topo
+        self._tasks: Dict[int, List[Task]] = {}
+        self._structs: Dict[int, tuple] = {}
+        self._dists: Dict[Tuple[int, tuple], Dict[str, float]] = {}
+        self._applied: Dict[int, tuple] = {}    # w -> caps sig last applied
+        self._runs: "OrderedDict[tuple, object]" = OrderedDict()
+        # (succ, ndeps, order) keyed by CEP *shape*, shared across plans:
+        # the dependency graph depends only on stage/microbatch counts
+        # and which transfers exist — not on durations, byte sizes or
+        # routes — so a candidate pool of like-shaped plans builds it once
+        self._shared = shared_structs
+
+    def _shape(self, w: int) -> tuple:
+        p = self.plan
+        return (w, len(p.stages), p.n_microbatches, p.training,
+                tuple(s.comm_bytes_out > 0 for s in p.stages),
+                tuple(p.training and s.dp_degree > 1 and s.sync_bytes > 0
+                      for s in p.stages))
+
+    def tasks(self, chunks: int = 1) -> List[Task]:
+        w = max(int(chunks), 1)
+        out = self._tasks.get(w)
+        if out is None:
+            if w == 1:
+                out = build_cep(self.plan, self.topo)
+            else:
+                out = chunk_comm_tasks(self.tasks(1), w)
+            self._tasks[w] = out
+        return out
+
+    def _structure(self, w: int) -> tuple:
+        struct = self._structs.get(w)
+        if struct is not None:
+            return struct
+        shape = self._shape(w) if self._shared is not None else None
+        shared = self._shared.get(shape) if shape is not None else None
+        if shared is not None:
+            # same dependency graph, this plan's task objects
+            struct = ({t.name: t for t in self.tasks(w)},) + shared
+        else:
+            if w == 1:
+                struct = task_structure(self.tasks(1))
+            else:       # derived from the base order in one linear walk
+                struct = task_structure(self.tasks(w), base=self._structure(1))
+            if shape is not None:
+                self._shared[shape] = struct[1:]
+        self._structs[w] = struct
+        return struct
+
+    def engine(self, chunks: int, caps: Dict[str, float],
+               comm_mode: str = "scheduled",
+               compute_speed: Optional[Dict[str, float]] = None
+               ) -> EventEngine:
+        w = max(int(chunks), 1)
+        eng = EventEngine(self.tasks(w), caps, comm_mode=comm_mode,
+                          compute_speed=compute_speed,
+                          structure=self._structure(w))
+        caps_sig = tuple(sorted(caps.items()))
+        sig = (w, caps_sig)
+        if self._applied.get(w) == caps_sig and sig in self._dists:
+            return eng     # this task list already carries these priorities
+        self._dists[sig] = eng.assign_priorities(self._dists.get(sig))
+        # chunk variants share their non-comm Task objects with the base
+        # list, so applying priorities for one w stales every other
+        self._applied = {w: caps_sig}
+        return eng
+
+    def priorities(self, chunks: int, caps: Dict[str, float]
+                   ) -> Dict[str, float]:
+        """Critical-path priority map for one (chunk count, caps) pair
+        (the ``lower_bound`` input), cached like :meth:`engine`'s."""
+        sig = (max(int(chunks), 1), tuple(sorted(caps.items())))
+        dist = self._dists.get(sig)
+        if dist is None:
+            self.engine(chunks, caps)
+            dist = self._dists[sig]
+        return dist
+
+    def run(self, chunks: int, caps: Dict[str, float],
+            comm_mode: str = "scheduled",
+            compute_speed: Optional[Dict[str, float]] = None):
+        """Memoized schedule execution: the engine is deterministic, so
+        one ``(chunks, comm_mode, caps, speeds)`` configuration is
+        simulated once and every repeat — the fair pre-ranking pass
+        followed by ``refine``'s null schedule, or the adapter
+        re-refining its Pareto set under unchanged conditions — returns
+        the cached :class:`~repro.core.engine.ScheduleResult`."""
+        sig = (max(int(chunks), 1), comm_mode,
+               tuple(sorted(caps.items())),
+               tuple(sorted((compute_speed or {}).items())))
+        res = self._runs.get(sig)
+        if res is None:
+            res = self.engine(chunks, caps, comm_mode, compute_speed).run()
+            self._runs[sig] = res
+            while len(self._runs) > 64:
+                self._runs.popitem(last=False)
+        else:
+            self._runs.move_to_end(sig)
+        return res

@@ -141,11 +141,63 @@ def resolve_costs(costs: Optional[CostProvider]) -> CostProvider:
     return ANALYTIC_COSTS if costs is None else costs
 
 
+class SegmentAggregates:
+    """O(1) pricing of contiguous segments of a serialized node order.
+
+    The partitioner's DP prices O(L²·N²) candidate stages, every one of
+    which is a *contiguous* slice of one fixed serialization of the
+    planning graph (chain slices, and bundles of adjacent chains).  This
+    class memoizes the per-segment sums :meth:`CostModel.make_stage`
+    needs — forward/backward FLOPs and parameter bytes — so each
+    distinct segment is summed once and every repeat costs O(1).
+
+    Sums are accumulated left-to-right exactly like ``sum(...)`` over
+    the slice, so segment prices are bit-identical to the naive path
+    (plan-parity golden tests depend on this).
+    """
+
+    __slots__ = ("order", "_nodes", "_memo")
+
+    def __init__(self, graph: ModelGraph, order: Sequence[int]):
+        self.order = list(order)
+        self._nodes = [graph.nodes[i] for i in self.order]
+        # (lo, hi) -> (flops_fwd, flops_bwd, param_bytes, state_bytes)
+        # for order[lo:hi]
+        self._memo: Dict[tuple, tuple] = {}
+
+    def segment(self, lo: int, hi: int) -> tuple:
+        """(flops_fwd, flops_bwd, param_bytes, state_bytes) summed over
+        order[lo:hi]."""
+        if hi <= lo:
+            return (0.0, 0.0, 0.0, 0.0)
+        memo = self._memo
+        out = memo.get((lo, hi))
+        if out is not None:
+            return out
+        h = hi - 1
+        while h > lo and (lo, h) not in memo:
+            h -= 1
+        ff, fb, pb, sb = memo[(lo, h)] if h > lo else (0.0, 0.0, 0.0, 0.0)
+        while h < hi:
+            n = self._nodes[h]
+            ff, fb, pb, sb = (ff + n.flops_fwd, fb + n.flops_bwd,
+                              pb + n.param_bytes, sb + n.state_bytes)
+            h += 1
+            memo[(lo, h)] = (ff, fb, pb, sb)
+        return memo[(lo, hi)]
+
+    def boundary_act_bytes(self, hi: int) -> float:
+        """Per-sample output-activation bytes of segment-final node
+        ``order[hi-1]`` (the stage's downstream boundary)."""
+        return self._nodes[hi - 1].act_bytes
+
+
 class CostModel:
     def __init__(self, graph: ModelGraph, topo: Topology, workload: Workload):
         self.graph = graph
         self.topo = topo
         self.wl = workload
+        self._eff: Dict[tuple, float] = {}      # (device, tp) -> eff FLOP/s
 
     # -- stage construction ----------------------------------------------------
     def make_stage(self, node_ids: Sequence[int], devices: Sequence[int],
@@ -156,12 +208,39 @@ class CostModel:
         flops_b = sum(n.flops_bwd for n in nodes) * b if self.wl.training else 0.0
         params = sum(n.param_bytes for n in nodes)
         boundary_act = nodes[-1].act_bytes * b
+        state = sum(n.state_bytes for n in nodes)
+        return self._build_stage(list(node_ids), flops_f, flops_b, params,
+                                 boundary_act, state, devices, next_devices)
 
+    def make_stage_span(self, agg: SegmentAggregates, lo: int, hi: int,
+                        devices: Sequence[int],
+                        next_devices: Optional[Sequence[int]] = None) -> Stage:
+        """``make_stage`` for the contiguous segment ``agg.order[lo:hi]``,
+        priced in O(1) from the memoized prefix aggregates."""
+        b = self.wl.microbatch_size
+        ff, fb, pb, sb = agg.segment(lo, hi)
+        flops_f = ff * b
+        flops_b = fb * b if self.wl.training else 0.0
+        boundary_act = agg.boundary_act_bytes(hi) * b
+        return self._build_stage(agg.order[lo:hi], flops_f, flops_b, pb,
+                                 boundary_act, sb, devices, next_devices)
+
+    def _build_stage(self, node_ids: List[int], flops_f: float, flops_b: float,
+                     params: float, boundary_act: float, state: float,
+                     devices: Sequence[int],
+                     next_devices: Optional[Sequence[int]]) -> Stage:
         devs = list(devices)
         tp = 1
         if len(devs) == 1:
             tp = self.topo.devices[devs[0]].n_accel
-        speeds = {d: self.topo.devices[d].effective_flops(tp) for d in devs}
+        eff = self._eff
+        speeds = {}
+        for d in devs:
+            v = eff.get((d, tp))
+            if v is None:
+                v = self.topo.devices[d].effective_flops(tp)
+                eff[(d, tp)] = v
+            speeds[d] = v
         total_speed = sum(speeds.values())
         split = {d: speeds[d] / total_speed for d in devs}
 
@@ -192,10 +271,11 @@ class CostModel:
             sync_bytes = 2.0 * params * (g - 1) / g \
                 * self.wl.grad_compression              # ring all-reduce per device
 
-        return Stage(node_ids=list(node_ids), devices=devs, microbatch_split=split,
+        return Stage(node_ids=node_ids, devices=devs, microbatch_split=split,
                      tp_degree=tp, fwd_time=t_f + send_t, bwd_time=t_b + send_t,
                      comm_bytes_out=boundary_act, sync_bytes=sync_bytes,
-                     param_bytes=params, flops_fwd=flops_f, flops_bwd=flops_b)
+                     param_bytes=params, flops_fwd=flops_f, flops_bwd=flops_b,
+                     state_bytes=state)
 
     # -- memory ------------------------------------------------------------------
     def stage_memory(self, stage: Stage, n_stages_hint: int = 1,
@@ -207,8 +287,10 @@ class CostModel:
         in_flight = min(self.wl.n_microbatches, n_stages_hint) if schedule == "1f1b" \
             else self.wl.n_microbatches
         act = stage.comm_bytes_out * in_flight
-        state = sum(self.graph.nodes[i].state_bytes for i in stage.node_ids) \
-            * self.wl.microbatch_size
+        state = stage.state_bytes
+        if state is None:       # hand-built Stage: fall back to the graph
+            state = sum(self.graph.nodes[i].state_bytes for i in stage.node_ids)
+        state = state * self.wl.microbatch_size
         out = {}
         for d in stage.devices:
             out[d] = params_per_dev + act * stage.microbatch_split[d] + state

@@ -78,6 +78,12 @@ class Topology:
         # transfer traverses. When absent we fall back to any shared
         # medium containing both endpoints.
         self._p2p = dict(p2p or {})
+        # route/bandwidth memos — a Topology is immutable after
+        # construction (calibration and churn build new instances), and
+        # the planner asks for the same pairs millions of times
+        self._route_cache: Dict[Tuple[int, int], List[LinkResource]] = {}
+        self._bw_cache: Dict[Tuple[int, int], float] = {}
+        self._lat_cache: Dict[Tuple[int, int], float] = {}
 
     # -- construction helpers -------------------------------------------------
     @classmethod
@@ -127,26 +133,40 @@ class Topology:
         if i == j:
             return []
         key = (i, j)
+        route = self._route_cache.get(key)
+        if route is not None:
+            return route
         if key in self._p2p:
-            return [self.resources[n] for n in self._p2p[key]]
-        out = []
-        for r in self.resources.values():
-            if r.shared and i in r.members and j in r.members:
-                out.append(r)
-        if not out:
-            raise KeyError(f"no route between device {i} and {j}")
-        return [min(out, key=lambda r: -r.capacity)]  # best shared medium
+            route = [self.resources[n] for n in self._p2p[key]]
+        else:
+            out = []
+            for r in self.resources.values():
+                if r.shared and i in r.members and j in r.members:
+                    out.append(r)
+            if not out:
+                raise KeyError(f"no route between device {i} and {j}")
+            route = [min(out, key=lambda r: -r.capacity)]  # best shared medium
+        self._route_cache[key] = route
+        return route
 
     def peak_bandwidth(self, i: int, j: int) -> float:
         """Contention-free peak p2p bandwidth (Phase-1 relaxation)."""
         if i == j:
             return math.inf
-        return min(r.capacity for r in self.resources_between(i, j))
+        bw = self._bw_cache.get((i, j))
+        if bw is None:
+            bw = min(r.capacity for r in self.resources_between(i, j))
+            self._bw_cache[(i, j)] = bw
+        return bw
 
     def route_latency(self, i: int, j: int) -> float:
         if i == j:
             return 0.0
-        return sum(r.latency for r in self.resources_between(i, j))
+        lat = self._lat_cache.get((i, j))
+        if lat is None:
+            lat = sum(r.latency for r in self.resources_between(i, j))
+            self._lat_cache[(i, j)] = lat
+        return lat
 
     def transfer_time(self, i: int, j: int, nbytes: float) -> float:
         if i == j or nbytes <= 0.0:

@@ -65,35 +65,49 @@ class ScheduleResult:
 class EventEngine:
     def __init__(self, tasks: Sequence[Task], resource_caps: Dict[str, float],
                  comm_mode: str = "scheduled",
-                 compute_speed: Optional[Dict[str, float]] = None):
+                 compute_speed: Optional[Dict[str, float]] = None,
+                 structure: Optional[tuple] = None):
         """``resource_caps`` — bytes/sec per network resource.
         ``compute_speed`` — multiplicative speed factor per executor
-        (runtime dynamics: 0.5 = device at half speed)."""
-        self.tasks = {t.name: t for t in tasks}
+        (runtime dynamics: 0.5 = device at half speed).
+        ``structure`` — a previous engine's :meth:`structure` for the
+        *same task list* (dependency graph + topological order), so
+        repeated engines over one CEP graph skip the O(V+E) rebuild
+        (see :class:`repro.core.cep.CEPCache`)."""
         self.caps = dict(resource_caps)
         self.mode = comm_mode
         self.speed = dict(compute_speed or {})
-        self._succ: Dict[str, List[str]] = {n: [] for n in self.tasks}
-        self._ndeps: Dict[str, int] = {}
-        for t in self.tasks.values():
-            missing = [d for d in t.deps if d not in self.tasks]
-            if missing:
-                raise ValueError(f"task {t.name} depends on unknown {missing}")
-            self._ndeps[t.name] = len(t.deps)
-            for d in t.deps:
-                self._succ[d].append(t.name)
+        if structure is None:
+            structure = task_structure(tasks)
+        self.tasks, self._succ, self._ndeps, self._order = structure
+
+    def structure(self) -> tuple:
+        """Shareable dependency structure: (tasks-by-name, successors,
+        dependency counts, topological order). Valid for any engine
+        built over the same task list."""
+        return (self.tasks, self._succ, self._ndeps, self._order)
 
     # -- critical-path priorities -------------------------------------------------
-    def assign_priorities(self) -> None:
-        order = self._topo_order()
-        dist: Dict[str, float] = {}
-        for name in reversed(order):
-            t = self.tasks[name]
-            base = t.duration if t.kind == "compute" else self._full_bw_time(t)
-            succ_max = max((dist[s] for s in self._succ[name]), default=0.0)
-            dist[name] = base + succ_max
+    def assign_priorities(self,
+                          dist: Optional[Dict[str, float]] = None
+                          ) -> Dict[str, float]:
+        """Set each task's priority to its downstream critical path.
+
+        Pass a ``dist`` previously returned for the same (task graph,
+        resource caps) to re-apply cached priorities without the O(V+E)
+        recomputation; the mapping is returned either way so callers can
+        cache it (priorities depend on caps but not on compute speed or
+        comm mode)."""
+        if dist is None:
+            dist = {}
+            for name in reversed(self._order):
+                t = self.tasks[name]
+                base = t.duration if t.kind == "compute" else self._full_bw_time(t)
+                succ_max = max((dist[s] for s in self._succ[name]), default=0.0)
+                dist[name] = base + succ_max
         for name, d in dist.items():
             self.tasks[name].priority = d
+        return dist
 
     def _full_bw_time(self, t: Task) -> float:
         if not t.resources or t.nbytes <= 0:
@@ -101,34 +115,25 @@ class EventEngine:
         cap = min(self.caps[r] for r in t.resources)
         return t.net_latency + t.nbytes / cap
 
-    def _topo_order(self) -> List[str]:
-        indeg = dict(self._ndeps)
-        ready = [n for n, d in indeg.items() if d == 0]
-        out: List[str] = []
-        while ready:
-            n = ready.pop()
-            out.append(n)
-            for s in self._succ[n]:
-                indeg[s] -= 1
-                if indeg[s] == 0:
-                    ready.append(s)
-        if len(out) != len(self.tasks):
-            raise ValueError("task graph has a cycle")
-        return out
-
     # -- simulation -----------------------------------------------------------------
     def run(self) -> ScheduleResult:
         EPS = 1e-12
+        tasks = self.tasks
+        succ = self._succ
+        caps = self.caps
+        speed = self.speed
+        scheduled = self.mode == "scheduled"
+        heappush, heappop = heapq.heappush, heapq.heappop
         ndeps = dict(self._ndeps)
         ready: List[Tuple[float, str]] = []     # (-priority, name)
         for n, d in ndeps.items():
             if d == 0:
-                heapq.heappush(ready, (-self.tasks[n].priority, n))
+                heappush(ready, (-tasks[n].priority, n))
 
         t_now = 0.0
         start: Dict[str, float] = {}
         finish: Dict[str, float] = {}
-        res_busy: Dict[str, float] = {r: 0.0 for r in self.caps}
+        res_busy: Dict[str, float] = {r: 0.0 for r in caps}
         dev_busy: Dict[str, float] = {}
 
         running_compute: List[Tuple[float, str]] = []     # heap (end, name)
@@ -136,87 +141,115 @@ class EventEngine:
         busy_net: Dict[str, str] = {}                     # resource -> task (scheduled mode)
         active_comm: Dict[str, float] = {}                # task -> remaining bytes
         ready_at: Dict[str, float] = {}                   # comm -> end of latency phase
+        share: Dict[str, int] = {}                        # active flows per resource
+        # a task that fails to start parks under the executor/resource
+        # tokens blocking it (they free exclusively in `complete`); each
+        # waiting queue is a priority heap and a freed token promotes
+        # only its best parked waiter into the ready heap — promoting
+        # every waiter on every completion is quadratic on a shared
+        # medium with hundreds of queued chunks
+        waiting: Dict[str, List[Tuple[float, str]]] = {}  # token -> heap[(pr, name)]
+        parked: set = set()
+        # scheduled mode holds every resource exclusively, so an active
+        # flow's rate is a constant: min capacity along its route
+        fixed_rate: Dict[str, float] = {}
 
-        def comm_rates() -> Dict[str, float]:
-            share: Dict[str, int] = {}
-            for name in active_comm:
-                for r in self.tasks[name].resources:
-                    share[r] = share.get(r, 0) + 1
-            rates = {}
-            for name in active_comm:
-                t = self.tasks[name]
-                rates[name] = min(self.caps[r] / share[r] for r in t.resources) \
-                    if t.resources else math.inf
-            return rates
+        def promote(token: str) -> None:
+            """Move the best still-parked waiter of a freed token into
+            the ready heap (stale heap entries are skipped)."""
+            w = waiting.get(token)
+            while w:
+                item = heapq.heappop(w)
+                if item[1] in parked:
+                    parked.discard(item[1])
+                    heappush(ready, item)
+                    break
 
-        def try_start(name: str) -> bool:
-            t = self.tasks[name]
+        def try_start(pr: float, name: str) -> None:
+            t = tasks[name]
             if t.kind == "compute":
-                if t.executor is not None and t.executor in busy_exec:
-                    return False
-                dur = t.duration / self.speed.get(t.executor, 1.0)
+                ex = t.executor
+                if ex is not None and ex in busy_exec:
+                    parked.add(name)
+                    heappush(waiting.setdefault(ex, []), (pr, name))
+                    return
+                dur = t.duration / speed.get(ex, 1.0)
                 start[name] = t_now
-                heapq.heappush(running_compute, (t_now + dur, name))
-                if t.executor is not None:
-                    busy_exec[t.executor] = name
-                    dev_busy[t.executor] = dev_busy.get(t.executor, 0.0) + dur
-                return True
+                heappush(running_compute, (t_now + dur, name))
+                if ex is not None:
+                    busy_exec[ex] = name
+                    dev_busy[ex] = dev_busy.get(ex, 0.0) + dur
+                return
             # comm
             if t.nbytes <= EPS or not t.resources:
                 start[name] = t_now
-                heapq.heappush(running_compute, (t_now, name))  # instantaneous
-                return True
-            if self.mode == "scheduled":
-                if any(r in busy_net for r in t.resources):
-                    return False
+                heappush(running_compute, (t_now, name))  # instantaneous
+                return
+            if scheduled:
+                holders = [r for r in t.resources if r in busy_net]
+                if holders:
+                    parked.add(name)
+                    for r in holders:
+                        heappush(waiting.setdefault(r, []), (pr, name))
+                    # this task may have been the designated waiter of a
+                    # token that is free right now — hand that token to
+                    # its next waiter so it doesn't idle a whole wave
+                    for r in t.resources:
+                        if r not in busy_net and waiting.get(r):
+                            promote(r)
+                    return
                 for r in t.resources:
                     busy_net[r] = name
+                if name not in fixed_rate:
+                    fixed_rate[name] = min(caps[r] for r in t.resources)
             start[name] = t_now
             active_comm[name] = t.nbytes
             ready_at[name] = t_now + t.net_latency   # bytes flow after the latency
-            return True
+            for r in t.resources:
+                share[r] = share.get(r, 0) + 1
+            return
 
         def complete(name: str) -> None:
             finish[name] = t_now
-            t = self.tasks[name]
+            t = tasks[name]
             if t.kind == "compute" and t.executor is not None:
                 if busy_exec.get(t.executor) == name:
                     del busy_exec[t.executor]
+                    promote(t.executor)
             if t.kind == "comm":
                 for r in t.resources:
                     if busy_net.get(r) == name:
                         del busy_net[r]
-            for s in self._succ[name]:
+                        promote(r)
+            for s in succ[name]:
                 ndeps[s] -= 1
                 if ndeps[s] == 0:
-                    heapq.heappush(ready, (-self.tasks[s].priority, s))
+                    heappush(ready, (-tasks[s].priority, s))
 
         n_done = 0
-        n_total = len(self.tasks)
+        n_total = len(tasks)
         while n_done < n_total:
             # start everything we can, highest priority first
-            requeue: List[Tuple[float, str]] = []
-            progressed = True
-            while progressed:
-                progressed = False
-                while ready:
-                    pr, name = heapq.heappop(ready)
-                    if try_start(name):
-                        progressed = True
-                    else:
-                        requeue.append((pr, name))
-                for item in requeue:
-                    heapq.heappush(ready, item)
-                requeue = []
-                if progressed:
-                    continue
+            while ready:
+                pr, name = heappop(ready)
+                try_start(pr, name)
             # advance time to next completion. Flows whose predicted
             # finish is the horizon are completed BY TIME, not by a
             # residual-byte check: on fast links (TPU ICI, multi-GbE) the
             # final drain can leave a few µbytes of float-cancellation
             # residue whose drain time rounds to zero ulps, pinning
             # t_now forever if completion only looked at bytes.
-            rates = comm_rates()
+            # max-min fluid share: each flow runs at its bottleneck
+            # resource's capacity split over that resource's active flows
+            # (the `share` counts, maintained incrementally). Scheduled
+            # mode holds resources exclusively (share ≡ 1), so the rate
+            # is each flow's precomputed route minimum.
+            if scheduled:
+                rates = fixed_rate
+            else:
+                rates = {name: min(caps[r] / share[r]
+                                   for r in tasks[name].resources)
+                         for name in active_comm}
             next_t = math.inf
             comm_finishers: List[str] = []
             if running_compute:
@@ -224,7 +257,9 @@ class EventEngine:
             for name, rem in active_comm.items():
                 r = rates[name]
                 if r > 0:
-                    eff_start = max(ready_at.get(name, 0.0), t_now)
+                    eff_start = ready_at.get(name, 0.0)
+                    if eff_start < t_now:
+                        eff_start = t_now
                     f = eff_start + rem / r
                     tol = EPS + 1e-12 * abs(next_t if next_t < math.inf else f)
                     if f < next_t - tol:
@@ -236,26 +271,36 @@ class EventEngine:
                 stuck = [n for n, d in ndeps.items() if d > 0 or n not in finish]
                 raise RuntimeError(f"engine stalled at t={t_now}; pending={stuck[:5]}")
             # drain comm bytes (only past each task's latency phase)
-            for name in list(active_comm):
-                r = rates[name]
-                flow_from = max(ready_at.get(name, 0.0), t_now)
-                active_comm[name] -= r * max(next_t - flow_from, 0.0)
-                for res in self.tasks[name].resources:
-                    res_busy[res] += max(next_t - t_now, 0.0)
+            dt = next_t - t_now
+            if dt < 0.0:
+                dt = 0.0
+            for name in active_comm:
+                flow_from = ready_at.get(name, 0.0)
+                if flow_from < t_now:
+                    flow_from = t_now
+                flow = next_t - flow_from
+                if flow > 0.0:
+                    active_comm[name] -= rates[name] * flow
+                for res in tasks[name].resources:
+                    res_busy[res] += dt
             t_now = next_t
             # completions
             while running_compute and running_compute[0][0] <= t_now + EPS:
-                _, name = heapq.heappop(running_compute)
+                _, name = heappop(running_compute)
                 complete(name)
                 n_done += 1
             for name in comm_finishers:
                 if name in active_comm:
                     del active_comm[name]
+                    for r in tasks[name].resources:
+                        share[r] -= 1
                     complete(name)
                     n_done += 1
             for name in list(active_comm):
                 if active_comm[name] <= 1e-6:
                     del active_comm[name]
+                    for r in tasks[name].resources:
+                        share[r] -= 1
                     complete(name)
                     n_done += 1
 
@@ -277,15 +322,72 @@ def chunk_comm_tasks(tasks: Sequence[Task], w: int) -> List[Task]:
         if t.kind != "comm" or t.nbytes <= 0:
             out.append(t)
             continue
+        nb = t.nbytes / w
         last = None
         for i in range(w):
             name = f"{t.name}#c{i}"
             deps = t.deps if i == 0 else (last,)
-            out.append(t.clone(name=name, nbytes=t.nbytes / w, deps=tuple(deps)))
+            out.append(Task(name=name, kind=t.kind, duration=t.duration,
+                            nbytes=nb, executor=t.executor,
+                            resources=t.resources, deps=tuple(deps),
+                            priority=t.priority, net_latency=t.net_latency))
             last = name
         rename[t.name] = last
     fixed: List[Task] = []
     for t in out:
         deps = tuple(rename.get(d, d) for d in t.deps)
-        fixed.append(t.clone(deps=deps) if deps != t.deps else t)
+        if deps != t.deps:
+            t = Task(name=t.name, kind=t.kind, duration=t.duration,
+                     nbytes=t.nbytes, executor=t.executor,
+                     resources=t.resources, deps=deps,
+                     priority=t.priority, net_latency=t.net_latency)
+        fixed.append(t)
     return fixed
+
+
+def task_structure(tasks: Sequence[Task],
+                   base: Optional[tuple] = None) -> tuple:
+    """Dependency structure for :class:`EventEngine`: ``(tasks-by-name,
+    successors, dependency counts, topological order)``.
+
+    With ``base`` — the structure of the *unchunked* task list the
+    chunked ``tasks`` were derived from — everything is rebuilt by a
+    single linear walk of the base topological order (a comm task's
+    chunk chain slots into its position), skipping the dependency
+    validation and Kahn's algorithm.
+    """
+    by_name = {t.name: t for t in tasks}
+    succ: Dict[str, List[str]] = {n: [] for n in by_name}
+    ndeps: Dict[str, int] = {}
+    for t in tasks:
+        missing = [d for d in t.deps if d not in by_name]
+        if missing:
+            raise ValueError(f"task {t.name} depends on unknown {missing}")
+        ndeps[t.name] = len(t.deps)
+        for d in t.deps:
+            succ[d].append(t.name)
+    if base is not None:
+        base_order = base[3]
+        order: List[str] = []
+        for name in base_order:
+            if name in by_name:
+                order.append(name)
+            else:                       # comm task replaced by its chunks
+                i = 0
+                while f"{name}#c{i}" in by_name:
+                    order.append(f"{name}#c{i}")
+                    i += 1
+        return by_name, succ, ndeps, order
+    indeg = dict(ndeps)
+    ready = [n for n, d in indeg.items() if d == 0]
+    order = []
+    while ready:
+        n = ready.pop()
+        order.append(n)
+        for s in succ[n]:
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                ready.append(s)
+    if len(order) != len(by_name):
+        raise ValueError("task graph has a cycle")
+    return by_name, succ, ndeps, order

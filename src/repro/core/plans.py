@@ -28,6 +28,9 @@ class Stage:
     param_bytes: float = 0.0
     flops_fwd: float = 0.0           # per microbatch
     flops_bwd: float = 0.0
+    # per-sample recurrent/KV state bytes; None on hand-built stages
+    # (the cost model then re-derives it from the graph)
+    state_bytes: Optional[float] = None
 
     @property
     def dp_degree(self) -> int:

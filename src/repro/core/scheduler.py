@@ -17,13 +17,17 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .cep import build_cep, cep_resource_caps
+from .cep import CEPCache, cep_resource_caps
 from .device import Topology
-from .engine import EventEngine, ScheduleResult, Task, chunk_comm_tasks
+from .engine import ScheduleResult
 from .plans import ParallelismPlan
 from .qoe import QoESpec
+
+#: Max plans whose CEP expansion a scheduler keeps alive (LRU).
+_CEP_CACHE_SIZE = 128
 
 
 @dataclasses.dataclass
@@ -39,6 +43,26 @@ class NetworkScheduler:
         self.topo = topo
         self.qoe = qoe
         self.config = config or SchedulerConfig()
+        # plan-keyed CEP cache: (stages identity, microbatch count,
+        # training) -> (stages ref, CEPCache). Phase-2 refinements of one
+        # plan — and of its `dataclasses.replace` descendants, which
+        # share the stages list — reuse one CEP expansion. The stages
+        # reference pins the id() key and guards against reuse.
+        self._cep: "OrderedDict[tuple, tuple]" = OrderedDict()
+        # CEP dependency structures shared across like-shaped plans
+        self._cep_structs: Dict[tuple, tuple] = {}
+
+    def _cep_for(self, plan: ParallelismPlan) -> CEPCache:
+        key = (id(plan.stages), plan.n_microbatches, plan.training)
+        hit = self._cep.get(key)
+        if hit is not None and hit[0] is plan.stages:
+            self._cep.move_to_end(key)
+            return hit[1]
+        cep = CEPCache(plan, self.topo, self._cep_structs)
+        self._cep[key] = (plan.stages, cep)
+        while len(self._cep) > _CEP_CACHE_SIZE:
+            self._cep.popitem(last=False)
+        return cep
 
     @staticmethod
     def _exec_speeds(plan: ParallelismPlan,
@@ -57,27 +81,26 @@ class NetworkScheduler:
     # -- single-plan refinement ---------------------------------------------------
     def refine(self, plan: ParallelismPlan,
                compute_speed: Optional[Dict[int, float]] = None,
-               bandwidth_scale: Optional[Dict[str, float]] = None) -> ParallelismPlan:
+               bandwidth_scale: Optional[Dict[str, float]] = None,
+               modes: Optional[Sequence[int]] = None) -> ParallelismPlan:
         """Re-evaluates ``plan`` under real contention with Dora's chunked
-        temporal scheduling; picks the best chunk count within budget."""
-        tasks = build_cep(plan, self.topo)
+        temporal scheduling; picks the best chunk count within budget.
+
+        ``modes`` overrides the configured chunk counts for this call —
+        warm-start replanning passes the plan's previously winning count
+        so a steady-state re-refine runs one schedule, not five."""
+        cep = self._cep_for(plan)
         caps = self._caps(bandwidth_scale)
         compute_speed = self._exec_speeds(plan, compute_speed)
         best: Tuple[float, Optional[ScheduleResult], int] = (math.inf, None, 1)
         t0 = time.perf_counter()
         # w=0 — the null schedule (fluid sharing, no intervention). Dora's
         # temporal scheduling must never lose to just sending the bytes.
-        engine = EventEngine(tasks, caps, comm_mode="fair",
-                             compute_speed=compute_speed)
-        engine.assign_priorities()
-        res = engine.run()
+        res = cep.run(0, caps, comm_mode="fair", compute_speed=compute_speed)
         best = (res.makespan, res, 0)
-        for w in self.config.modes:
-            chunked = chunk_comm_tasks(tasks, w)
-            engine = EventEngine(chunked, caps, comm_mode="scheduled",
-                                 compute_speed=compute_speed)
-            engine.assign_priorities()
-            res = engine.run()
+        for w in (self.config.modes if modes is None else modes):
+            res = cep.run(w, caps, comm_mode="scheduled",
+                          compute_speed=compute_speed)
             if res.makespan < best[0]:
                 best = (res.makespan, res, w)
             if time.perf_counter() - t0 > self.config.time_budget_s:
@@ -86,7 +109,8 @@ class NetworkScheduler:
         refined = dataclasses.replace(plan)
         refined.latency = lat
         refined.schedule = sched
-        refined.meta = dict(plan.meta, chunks=w, lp_bound=self.lower_bound(plan, caps))
+        refined.meta = dict(plan.meta, chunks=w,
+                            lp_bound=self.lower_bound(plan, caps, cep=cep))
         self._reprice(refined)
         return refined
 
@@ -95,11 +119,9 @@ class NetworkScheduler:
                       bandwidth_scale: Optional[Dict[str, float]] = None) -> ParallelismPlan:
         """Contention WITHOUT scheduling: transfers fluid-share the medium
         (how contention-oblivious planners actually execute)."""
-        tasks = build_cep(plan, self.topo)
-        engine = EventEngine(tasks, self._caps(bandwidth_scale), comm_mode="fair",
-                             compute_speed=self._exec_speeds(plan, compute_speed))
-        engine.assign_priorities()
-        res = engine.run()
+        res = self._cep_for(plan).run(
+            0, self._caps(bandwidth_scale), comm_mode="fair",
+            compute_speed=self._exec_speeds(plan, compute_speed))
         out = dataclasses.replace(plan)
         out.latency = res.makespan
         out.schedule = res
@@ -123,16 +145,21 @@ class NetworkScheduler:
         return out
 
     # -- Eq. (6) lower bound ------------------------------------------------------
-    def lower_bound(self, plan: ParallelismPlan, caps: Dict[str, float]) -> float:
+    def lower_bound(self, plan: ParallelismPlan, caps: Dict[str, float],
+                    cep: Optional[CEPCache] = None) -> float:
         """max(zero-contention critical path, per-resource volume bound,
-        per-executor work bound) — certifies list-schedule quality."""
-        tasks = build_cep(plan, self.topo)
-        engine = EventEngine(tasks, caps)
-        engine.assign_priorities()          # priority == downstream critical path
-        cp = max((t.priority for t in engine.tasks.values()), default=0.0)
+        per-executor work bound) — certifies list-schedule quality.
+
+        Reuses the plan's cached CEP tasks and critical-path priorities
+        (``refine`` passes its own ``cep``) instead of rebuilding the
+        graph and re-running ``assign_priorities``."""
+        if cep is None:
+            cep = self._cep_for(plan)
+        dist = cep.priorities(1, caps)      # == downstream critical path
+        cp = max(dist.values(), default=0.0)
         vol: Dict[str, float] = {}
         work: Dict[str, float] = {}
-        for t in engine.tasks.values():
+        for t in cep.tasks(1):
             if t.kind == "comm":
                 for r in t.resources:
                     vol[r] = vol.get(r, 0.0) + t.nbytes / caps[r]

@@ -493,6 +493,11 @@ class ServeSession:
     # CostProvider — only the search/scheduler configs carry over)
     partitioner_config: Optional[PartitionerConfig] = None
     scheduler_config: Optional[SchedulerConfig] = None
+    #: churn replans warm-start from the surviving candidate pool
+    #: (``DoraPlanner.replan``) instead of re-running the full DP; the
+    #: fresh search still runs whenever no surviving candidate is
+    #: QoE-feasible on the new fleet
+    warm_replan: bool = True
 
     def __post_init__(self) -> None:
         if not self.active:
@@ -562,7 +567,22 @@ class ServeSession:
                               partitioner_config=self.partitioner_config,
                               scheduler_config=self.scheduler_config,
                               adapter_config=self.adapter.config)
-        result = planner.plan(self.report.workload)
+        # active-fleet plan device -> new-fleet device (drops leavers)
+        trans = {pos: mapping[orig] for pos, orig in enumerate(self.active)
+                 if orig in mapping}
+        if self.warm_replan and not event.join:
+            # device-LEAVE churn is the latency-critical replan (capacity
+            # dropped mid-service): warm-start from the surviving
+            # candidate pool (§4.3 — steady-state replans are
+            # ~pool-sized), falling back to the fresh DP when nothing
+            # survives QoE-feasibly.  JOIN churn always runs the full
+            # search — surviving candidates place no work on the new
+            # device, so only a fresh DP can reclaim its capacity, and
+            # the old plan keeps serving meanwhile.
+            result = planner.replan(self.report.workload, self.plans,
+                                    mapping=trans)
+        else:
+            result = planner.plan(self.report.workload)
         adapter = planner.make_adapter(result)
         new = result.best
         cond = RuntimeState(
@@ -578,8 +598,6 @@ class ServeSession:
                 bandwidth_scale=dict(cond.bandwidth_scale))
         # migration stall: the old plan re-indexed into the new fleet
         # prices delta switching (layers already resident stay put)
-        trans = {pos: mapping[orig] for pos, orig in enumerate(self.active)
-                 if orig in mapping}
         proxy = _remap_plan(self.current, trans)
         if proxy is not None:
             stall = adapter.switch_cost(proxy, new)
@@ -592,6 +610,7 @@ class ServeSession:
             stall = adapter.config.switch_drain_s + load_t
         new.meta["switch_stall_s"] = stall
         new.meta["fleet"] = list(keep)
+        new.meta["warm_replan"] = result.warm_start
         self.adapter = adapter
         self.active = keep
         self.state = merged
@@ -606,8 +625,13 @@ class ServeSession:
         return self.report.qoe.satisfied(self.current)
 
 
-def serve(scenario: ScenarioRef, **overrides) -> ServeSession:
-    """Plan a scenario and arm the runtime adapter over its Pareto set."""
+def serve(scenario: ScenarioRef, *, warm_replan: bool = True,
+          **overrides) -> ServeSession:
+    """Plan a scenario and arm the runtime adapter over its Pareto set.
+
+    ``warm_replan=False`` forces churn events through the full fresh DP
+    (the pre-warm-start behavior) — the planner benchmark uses it to
+    price cold vs. warm replans."""
     planner, sc, wl = planner_for(scenario, **overrides)
     result = planner.plan(wl)
     report = PlanReport(scenario=sc, topology=planner.topo,
@@ -616,7 +640,8 @@ def serve(scenario: ScenarioRef, **overrides) -> ServeSession:
     adapter = planner.make_adapter(result)
     return ServeSession(report=report, adapter=adapter, current=result.best,
                         partitioner_config=planner.partitioner.config,
-                        scheduler_config=planner.scheduler.config)
+                        scheduler_config=planner.scheduler.config,
+                        warm_replan=warm_replan)
 
 
 @dataclasses.dataclass(frozen=True)

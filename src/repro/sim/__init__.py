@@ -5,10 +5,12 @@ deployment scenarios (``repro.scenarios`` — Table-3 settings and
 beyond), the discrete-event engine (``core.engine``), and the
 contended-execution runner.  The baseline planners moved to the
 strategy registry (``repro.strategies``); their ``*_plan`` functions
-stay re-exported here for back compatibility.
+stay re-exported here for back compatibility (the deeper
+``repro.sim.baselines`` shim is deprecated and warns).
 """
-from .baselines import (BaselineError, alpa_plan, asteroid_plan,
-                        brute_force_optimal, edgeshard_plan, metis_plan)
+from ..strategies.baselines import (BaselineError, alpa_plan, asteroid_plan,
+                                    brute_force_optimal, edgeshard_plan,
+                                    metis_plan)
 from .runner import (COMPARISON_PLANNERS, ExecResult, compare_planners,
                      dora_plan, execute_plan, run_strategy, scenario_case,
                      setting_and_graph, workload_for)

@@ -1,20 +1,32 @@
-"""Back-compat shim — the baseline planners moved to
-:mod:`repro.strategies.baselines`, where they are registered in the
-planner-strategy registry (``repro.strategies.get_strategy``).
+"""DEPRECATED back-compat shim — the baseline planners live in
+:mod:`repro.strategies.baselines`, registered in the planner-strategy
+registry (``repro.strategies.get_strategy``).
 
-The plain ``*_plan`` functions stay importable from here (and from
-``repro.sim``) for existing callers; new code should resolve planners
-through the registry instead.
+Importing names from this module works but raises a
+``DeprecationWarning``; new code should either resolve planners through
+the registry or import the ``*_plan`` functions from
+``repro.strategies.baselines`` directly.  The re-exports on
+``repro.sim`` itself (``from repro.sim import alpa_plan``) remain
+warning-free for now.
 """
 from __future__ import annotations
 
-from ..strategies.baselines import (  # noqa: F401
-    LATENCY_ONLY, BaselineError, alpa_plan, asteroid_plan,
-    brute_force_optimal, edgeshard_plan, metis_plan, plan_memory_ok,
-    reprice_stage)
+import warnings
 
 __all__ = [
     "LATENCY_ONLY", "BaselineError", "alpa_plan", "asteroid_plan",
     "brute_force_optimal", "edgeshard_plan", "metis_plan",
     "plan_memory_ok", "reprice_stage",
 ]
+
+
+def __getattr__(name: str):
+    if name in __all__:
+        warnings.warn(
+            "repro.sim.baselines is deprecated; import "
+            f"{name!r} from repro.strategies.baselines (or resolve the "
+            "planner via repro.strategies.get_strategy)",
+            DeprecationWarning, stacklevel=2)
+        from ..strategies import baselines as _baselines
+        return getattr(_baselines, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

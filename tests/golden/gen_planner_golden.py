@@ -1,0 +1,94 @@
+"""Regenerate ``planner_golden.json`` — the plan-parity lockfile.
+
+Run from the repo root against a KNOWN-GOOD planner (normally the commit
+*before* a performance change lands)::
+
+    PYTHONPATH=src python tests/golden/gen_planner_golden.py
+
+``tests/test_planner_golden.py`` then asserts the optimized planning
+stack still produces these exact plans: stage ``node_ids``/``devices``,
+microbatch geometry, and objective/latency/energy to 1e-9 relative.
+Regenerate only when a PR *intentionally* changes plan quality — and say
+so in the PR description.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+SCENARIOS = ("smart_home_2", "traffic_monitor", "edge_cluster")
+TOP_K = 3
+HERE = os.path.dirname(os.path.abspath(__file__))
+OUT = os.path.join(HERE, "planner_golden.json")
+
+
+def plan_fingerprint(plan) -> dict:
+    return {
+        "stages": [{"node_ids": list(s.node_ids), "devices": list(s.devices)}
+                   for s in plan.stages],
+        "microbatch_size": plan.microbatch_size,
+        "n_microbatches": plan.n_microbatches,
+        "objective": plan.objective,
+        "latency_s": plan.latency,
+        "energy_j": plan.energy,
+    }
+
+
+def diamond_case():
+    """A synthetic multi-chain (J=4) planning problem: the catalog's
+    models all compress to a single chain, so this diamond DAG is what
+    locks the DP's chain-*bundling* path (Eq. 4/5)."""
+    from repro.core.cost_model import Workload
+    from repro.core.device import make_setting
+    from repro.core.planning_graph import LayerNode, ModelGraph
+    from repro.core.qoe import QoESpec
+
+    def big(name):
+        return LayerNode(name, flops_fwd=2e9, param_bytes=60e6,
+                         act_bytes=2e6)
+    nodes = [big(f"n{i}") for i in range(10)]
+    edges = [(0, 1), (1, 2), (2, 3), (0, 4), (4, 5), (5, 6), (3, 7),
+             (6, 7), (7, 8), (8, 9)]
+    return (ModelGraph(nodes, edges), make_setting("smart_home_2"),
+            QoESpec(t_qoe=5.0, lam=100.0),
+            Workload(global_batch=16, microbatch_size=4,
+                     optimizer_mult=3.0))
+
+
+def generate() -> dict:
+    from repro import dora
+    from repro.core.partitioner import ModelPartitioner, PartitionerConfig
+    from repro.core.scheduler import SchedulerConfig
+    from repro.scenarios import get_scenario
+
+    doc: dict = {"top_k": TOP_K, "scenarios": {}}
+    graph, topo, qoe, wl = diamond_case()
+    part = ModelPartitioner(graph, topo, qoe, PartitionerConfig(top_k=TOP_K))
+    doc["diamond_pool"] = [plan_fingerprint(p)
+                           for p in part.plan(wl, pool=True)]
+    for name in SCENARIOS:
+        sc = get_scenario(name)
+        topo, graph = sc.build_topology(), sc.build_graph()
+        part = ModelPartitioner(graph, topo, sc.qoe,
+                                PartitionerConfig(top_k=TOP_K))
+        pool = part.plan(sc.workload, pool=True)
+        # unbounded chunk-search budget -> deterministic end-to-end result
+        rep = dora.plan(name,
+                        partitioner_config=PartitionerConfig(top_k=TOP_K),
+                        scheduler_config=SchedulerConfig(time_budget_s=1e9))
+        doc["scenarios"][name] = {
+            "partitioner_pool": [plan_fingerprint(p) for p in pool],
+            "best": plan_fingerprint(rep.best),
+            "candidates": [plan_fingerprint(p) for p in rep.candidates],
+        }
+    return doc
+
+
+if __name__ == "__main__":
+    doc = generate()
+    with open(OUT, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    n = sum(1 + len(v["partitioner_pool"]) + len(v["candidates"])
+            for v in doc["scenarios"].values())
+    print(f"wrote {OUT}: {len(doc['scenarios'])} scenarios, {n} plans")

@@ -100,3 +100,26 @@ def test_makespan_bounds(items):
 def test_stall_detection():
     with pytest.raises(ValueError):
         EventEngine([Task("a", "compute", deps=("missing",))], {})
+
+
+def test_task_field_list_pinned_for_chunk_fast_path():
+    """`chunk_comm_tasks` constructs Task literally (the dataclasses.replace
+    clone was a hot-path cost); adding a Task field must update that
+    constructor too, so pin the field list here."""
+    import dataclasses
+    assert [f.name for f in dataclasses.fields(Task)] == [
+        "name", "kind", "duration", "nbytes", "executor", "resources",
+        "deps", "priority", "net_latency"]
+
+
+def test_chunk_comm_tasks_preserves_all_fields():
+    t = Task("c", "comm", nbytes=100.0, resources=("net",), deps=("p",),
+             priority=3.5, net_latency=0.25)
+    p = Task("p", "compute", duration=1.0, executor="e0")
+    chunks = [x for x in chunk_comm_tasks([p, t], 4) if x.name.startswith("c#")]
+    assert len(chunks) == 4
+    for i, c in enumerate(chunks):
+        assert c.kind == "comm" and c.nbytes == 25.0
+        assert c.resources == ("net",) and c.priority == 3.5
+        assert c.net_latency == 0.25
+        assert c.deps == (("p",) if i == 0 else (f"c#c{i-1}",))

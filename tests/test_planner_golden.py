@@ -1,0 +1,176 @@
+"""Plan-quality parity locks for the optimized planning stack.
+
+``tests/golden/planner_golden.json`` snapshots the plans the
+*pre-optimization* planner produced (see
+``tests/golden/gen_planner_golden.py``); these tests assert the
+fast-path partitioner/scheduler still produce them — stage ``node_ids``
+and ``devices`` exactly, microbatch geometry exactly, and
+objective/latency/energy to 1e-9 relative.  The warm-start tests pin
+``DoraPlanner.replan`` against the cold fresh-DP path on a churn
+timeline.
+"""
+import json
+import os
+
+import pytest
+
+from repro import dora
+from repro.core.partitioner import ModelPartitioner, PartitionerConfig
+from repro.core.scheduler import SchedulerConfig
+from repro.scenarios import get_scenario
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "planner_golden.json")
+REL = 1e-9
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN_PATH, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def _assert_plan_matches(plan, want, ctx):
+    got_stages = [{"node_ids": list(s.node_ids), "devices": list(s.devices)}
+                  for s in plan.stages]
+    assert got_stages == want["stages"], ctx
+    assert plan.microbatch_size == want["microbatch_size"], ctx
+    assert plan.n_microbatches == want["n_microbatches"], ctx
+    for attr, key in (("objective", "objective"), ("latency", "latency_s"),
+                      ("energy", "energy_j")):
+        got, ref = getattr(plan, attr), want[key]
+        assert got == pytest.approx(ref, rel=REL), (ctx, attr, got, ref)
+
+
+def test_golden_covers_at_least_three_scenarios(golden):
+    assert len(golden["scenarios"]) >= 3
+
+
+@pytest.mark.parametrize("name", ["smart_home_2", "traffic_monitor",
+                                  "edge_cluster"])
+def test_partitioner_pool_matches_golden(name, golden):
+    g = golden["scenarios"][name]
+    sc = get_scenario(name)
+    part = ModelPartitioner(sc.build_graph(), sc.build_topology(), sc.qoe,
+                            PartitionerConfig(top_k=golden["top_k"]))
+    pool = part.plan(sc.workload, pool=True)
+    want = g["partitioner_pool"]
+    assert len(pool) == len(want), name
+    for i, (p, w) in enumerate(zip(pool, want)):
+        _assert_plan_matches(p, w, f"{name} pool[{i}]")
+
+
+@pytest.mark.parametrize("name", ["smart_home_2", "traffic_monitor",
+                                  "edge_cluster"])
+def test_end_to_end_plan_matches_golden(name, golden):
+    g = golden["scenarios"][name]
+    rep = dora.plan(
+        name, partitioner_config=PartitionerConfig(top_k=golden["top_k"]),
+        scheduler_config=SchedulerConfig(time_budget_s=1e9))
+    _assert_plan_matches(rep.best, g["best"], f"{name} best")
+    assert len(rep.candidates) == len(g["candidates"]), name
+    for i, (p, w) in enumerate(zip(rep.candidates, g["candidates"])):
+        _assert_plan_matches(p, w, f"{name} candidates[{i}]")
+
+
+def test_multichain_diamond_pool_matches_golden(golden):
+    """The catalog compresses to single chains; this synthetic diamond
+    DAG locks the DP's chain-bundling path (Eqs. 4-5)."""
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "gen_planner_golden",
+        os.path.join(os.path.dirname(GOLDEN_PATH), "gen_planner_golden.py"))
+    gen = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(gen)
+    graph, topo, qoe, wl = gen.diamond_case()
+    part = ModelPartitioner(graph, topo, qoe,
+                            PartitionerConfig(top_k=golden["top_k"]))
+    assert len(part.chains) > 1          # the case must stay multi-chain
+    pool = part.plan(wl, pool=True)
+    want = golden["diamond_pool"]
+    assert len(pool) == len(want)
+    for i, (p, w) in enumerate(zip(pool, want)):
+        _assert_plan_matches(p, w, f"diamond pool[{i}]")
+
+
+# -- warm-start vs cold replan on a churn timeline -----------------------------
+def _churn_replan(name, warm):
+    session = dora.serve(name, warm_replan=warm)
+    ev = next(e for _, e in session.report.scenario.timeline if e.leave)
+    plan, action, react = session.on_dynamics(ev)
+    assert action == "replan"
+    return session, plan, react
+
+
+@pytest.mark.parametrize("name", ["smart_home_2", "traffic_monitor"])
+def test_warm_replan_equivalent_to_cold_on_churn(name):
+    """Warm-start churn replans stay QoE-equivalent to the cold fresh-DP
+    path: same QoE verdict, objective within 50% (the warm pool re-prices
+    *surviving* candidates, so it may not find the cold search's exact
+    optimum — the QoE-feasibility gate is what it guarantees)."""
+    cold_sess, cold, _ = _churn_replan(name, warm=False)
+    warm_sess, warm, _ = _churn_replan(name, warm=True)
+    assert warm.meta.get("warm_replan") is True
+    assert cold.meta.get("warm_replan") is False
+    assert warm_sess.active == cold_sess.active
+    assert warm_sess.meets_qoe == cold_sess.meets_qoe
+    assert warm.objective <= cold.objective * 1.5 + 1e-9
+    # both sessions keep serving: the next (join) event replans again
+    join = next((e for _, e in warm_sess.report.scenario.timeline
+                 if e.join), None)
+    if join is not None:
+        plan, action, _ = warm_sess.on_dynamics(join)
+        assert action == "replan"
+        assert sorted(warm_sess.active) == sorted(
+            set(cold_sess.active) | set(join.join))
+
+
+def test_warm_replan_falls_back_to_cold_when_pool_infeasible():
+    """With a QoE no surviving candidate can meet, `replan` must run the
+    fresh DP and return byte-identical plans to a direct `plan` call."""
+    from repro.core.planner import DoraPlanner
+    from repro.core.qoe import QoESpec
+    sc = get_scenario("traffic_monitor")
+    topo, graph = sc.build_topology(), sc.build_graph()
+    planner = DoraPlanner(graph, topo, sc.qoe)
+    first = planner.plan(sc.workload)
+    # impossible latency target -> nothing in the warm pool satisfies QoE
+    strict = DoraPlanner(graph, topo, QoESpec(t_qoe=1e-9, lam=1e15))
+    cold = strict.plan(sc.workload)
+    warm = strict.replan(sc.workload, first)
+    assert warm.warm_start is False
+    assert [p.objective for p in warm.candidates] \
+        == [p.objective for p in cold.candidates]
+    assert warm.best.latency == cold.best.latency
+
+
+def test_warm_replan_identity_mapping_reprices_pool():
+    """Identity warm replan (no churn) returns a QoE-feasible result
+    drawn from the surviving pool without a fresh DP."""
+    from repro.core.planner import DoraPlanner
+    sc = get_scenario("smart_home_2")
+    topo, graph = sc.build_topology(), sc.build_graph()
+    planner = DoraPlanner(graph, topo, sc.qoe)
+    first = planner.plan(sc.workload)
+    again = planner.replan(sc.workload, first)
+    assert again.warm_start is True
+    assert sc.qoe.satisfied(again.best)
+    assert again.total_s >= 0.0
+
+
+def test_warm_replan_drops_fully_departed_stages():
+    """A candidate whose stage lost every device drops out of the warm
+    pool; survivors are rebuilt on the remaining devices."""
+    from repro.core.planner import DoraPlanner
+    sc = get_scenario("smart_home_2")
+    topo, graph = sc.build_topology(), sc.build_graph()
+    planner = DoraPlanner(graph, topo, sc.qoe)
+    first = planner.plan(sc.workload)
+    # drop device 4 (the churn timeline's leaver): mapping omits it
+    sub, mapping = topo.subset([d for d in range(topo.n) if d != 4])
+    small = DoraPlanner(graph, sub, sc.qoe)
+    res = small.replan(sc.workload, first, mapping=mapping)
+    for p in res.candidates:
+        for s in p.stages:
+            assert all(0 <= d < sub.n for d in s.devices)
+    assert sc.qoe.satisfied(res.best) or not res.warm_start

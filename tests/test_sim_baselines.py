@@ -1,5 +1,6 @@
 """Edge simulator + baselines: validity, paper-claim directionality."""
 import dataclasses
+import warnings
 
 import pytest
 
@@ -7,10 +8,24 @@ from repro.core.cost_model import Workload
 from repro.core.device import make_setting
 from repro.core.graph_builders import paper_model
 from repro.core.qoe import QoESpec
-from repro.sim import (BaselineError, alpa_plan, asteroid_plan,
-                       edgeshard_plan, metis_plan)
 from repro.sim.runner import (best_baseline, compare_planners, dora_plan,
                               execute_plan, setting_and_graph, workload_for)
+from repro.strategies.baselines import (BaselineError, alpa_plan,
+                                        asteroid_plan, edgeshard_plan,
+                                        metis_plan)
+
+
+def test_sim_baselines_shim_warns_deprecation():
+    """The legacy module still resolves, but tells you where to go."""
+    import repro.sim.baselines as shim
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        fn = shim.alpa_plan
+    assert fn is alpa_plan
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert any("repro.strategies.baselines" in str(w.message) for w in caught)
+    with pytest.raises(AttributeError):
+        shim.nonexistent_name
 
 LAT = QoESpec(t_qoe=0.0, lam=1e15)
 
