@@ -1,0 +1,112 @@
+"""Multi-tenant fleets: co-planning vs independent per-tenant planning.
+
+The claim behind ``repro.fleet``: when several workloads share one edge
+fleet, planning each tenant *independently on the full fleet* piles
+every tenant onto the same energy-optimal device — once the resulting
+fluid-fair interference is priced (a device in k plans serves each at
+1/k of its cycles), tenants blow their QoE targets and burn more
+energy.  Co-planning (``dora.plan_fleet``: exclusive device allotments,
+fluid-fair shared links, joint assignment search) keeps every tenant
+QoE-feasible on the same hardware.
+
+For each registered multi-tenant fleet scenario this harness plans both
+ways, tabulates per-tenant latency vs target and total energy, then
+runs the multi-tenant serving simulator on the co-planned session
+(request streams + fleet timeline with churn/rebalancing) and checks
+that no exclusive device is ever oversubscribed.  Everything lands in
+``BENCH_fleet.json`` at the repo root (uploaded by CI alongside
+``BENCH_planner.json``).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import QUICK, Claim, table
+
+from repro import dora
+from repro.fleet import list_fleets, plan_independent, resolve_fleet
+
+ARTIFACT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_fleet.json"))
+
+#: Fleets whose independent baseline must violate QoE or overspend —
+#: the acceptance pair; QUICK runs only these two.
+CLAIM_FLEETS = ("smart_home_assist", "traffic_intersection")
+
+
+def run(report) -> None:
+    fleets = list(CLAIM_FLEETS) if QUICK else list_fleets()
+    artifact = {}
+    rows = []
+    claims = []
+    sim_rows = []
+    for name in fleets:
+        fs = resolve_fleet(name)
+        co = dora.plan_fleet(name)
+        ind = plan_independent(fs.build_topology(), fs.tenants,
+                               name=fs.name)
+        for tenant in co.tenants:
+            c, i = co.tenant(tenant), ind.tenant(tenant)
+            rows.append([
+                name, tenant, f"{c.scenario.qoe.t_qoe:g}",
+                f"{c.latency * 1e3:.1f}", "OK" if c.feasible else "MISS",
+                f"{i.latency * 1e3:.1f}", "OK" if i.feasible else "MISS",
+                str(list(c.allotment)), str(list(i.allotment))])
+        artifact[name] = {"co_planned": co.to_dict(),
+                          "independent": ind.to_dict()}
+
+        wins = (co.feasible
+                and (not ind.feasible
+                     or ind.total_energy > 1.05 * co.total_energy))
+        detail = (f"co: feasible={co.feasible} E={co.total_energy:.2f} J/req"
+                  f"; independent: feasible={ind.feasible} "
+                  f"E={ind.total_energy:.2f} J/req")
+        if name in CLAIM_FLEETS:
+            c = Claim(f"Fleet {name}: co-planning keeps every tenant "
+                      f"QoE-feasible where independent full-fleet planning "
+                      f"violates QoE or spends >5% more energy")
+            c.check(wins, detail)
+            claims.append(c)
+        artifact[name]["co_planning_wins"] = bool(wins)
+
+        trace = dora.simulate(name, mode="fleet")
+        artifact[name]["serving"] = trace.to_dict()
+        for tenant, tr in trace.tenants.items():
+            sim_rows.append([name, tenant, len(tr.requests),
+                             f"{tr.load.rate:g}",
+                             f"{tr.p50:.3f}" if tr.p50 == tr.p50 else "-",
+                             f"{tr.p99:.3f}" if tr.p99 == tr.p99 else "-",
+                             f"{tr.slo_attainment:.1%}", trace.rebalances])
+        over = trace.oversubscribed_devices
+        c = Claim(f"Fleet {name}: the serving simulator never "
+                  f"oversubscribes an exclusive device")
+        c.check(not over, f"oversubscribed: {over or 'none'}")
+        claims.append(c)
+
+    report.add_table(table(
+        ["fleet", "tenant", "t_qoe (s)", "co lat (ms)", "co QoE",
+         "indep lat (ms)", "indep QoE", "co devs", "indep devs"], rows,
+        "Co-planned vs independently-planned tenants "
+        "(independent latencies priced under fluid-fair interference)"))
+    report.add_table(table(
+        ["fleet", "tenant", "reqs", "rate/s", "p50 (s)", "p99 (s)",
+         "SLO att.", "rebalances"], sim_rows,
+        "Multi-tenant serving on the co-planned fleets "
+        "(default timelines: churn, throttles, WiFi shifts)"))
+    report.add_claims(claims)
+    report.stash("fig_fleet", artifact)
+
+    with open(ARTIFACT, "w", encoding="utf-8") as f:
+        json.dump(artifact, f, indent=2, allow_nan=False)
+        f.write("\n")
+    print(f"wrote {ARTIFACT}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    from .run import Report
+    r = Report()
+    run(r)
+    sys.exit(0 if all(c.ok for c in r.claims) else 1)

@@ -27,6 +27,7 @@ HARNESSES = [
     "fig15_pareto",
     "fig16_dynamics",
     "fig_serving",
+    "fig_fleet",
     "fig17_topk",
     "table4_planning_time",
     "roofline",

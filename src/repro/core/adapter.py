@@ -129,6 +129,21 @@ def pareto_filter(plans: Sequence[ParallelismPlan]) -> List[ParallelismPlan]:
     return out
 
 
+def cold_load_stall(plan: ParallelismPlan, topo: Topology,
+                    config: AdapterConfig) -> float:
+    """Service stall of loading ``plan`` onto a fleet with *nothing*
+    resident (no surviving placement to delta-switch from): drain the
+    pipeline, then stream the largest per-device parameter shard at the
+    slowest involved peak bandwidth.  Shared by the single-tenant and
+    fleet churn paths."""
+    nbytes = max(plan.device_param_bytes().values(), default=0.0)
+    bw = min((topo.peak_bandwidth(i, j)
+              for i in plan.devices for j in plan.devices if i != j),
+             default=math.inf)
+    load_t = nbytes / bw if bw != math.inf else 0.0
+    return config.switch_drain_s + load_t
+
+
 class RuntimeAdapter:
     def __init__(self, plans: Sequence[ParallelismPlan], topo: Topology,
                  qoe: QoESpec, scheduler: NetworkScheduler,
@@ -215,6 +230,7 @@ class RuntimeAdapter:
         cfg = self.config
         delta = horizon or cfg.horizon_s
         t, done, energy = 0.0, 0.0, 0.0
+        stall_s, stall_energy = 0.0, 0.0
         current: Optional[ParallelismPlan] = None
         events = sorted(dynamics, key=lambda e: e.t)
         trace: List[Dict[str, float]] = []
@@ -234,6 +250,21 @@ class RuntimeAdapter:
                 if span <= 0:
                     continue
                 stall = self.switch_cost(current, plan)
+                # migration is not free energy-wise: every device involved
+                # (old placement draining + new placement loading) keeps
+                # drawing idle power while it lasts — capped at the
+                # mixture slice, which is all the wall-clock this
+                # component occupies
+                stall_eff = min(stall, span)
+                if stall_eff > 0.0:
+                    involved = set(plan.devices)
+                    if current is not None:
+                        involved |= set(current.devices)
+                    idle_w = sum(self.topo.devices[d].p_idle
+                                 for d in involved)
+                    stall_s += stall_eff
+                    stall_energy += idle_w * stall_eff
+                    energy += idle_w * stall_eff
                 exec_span = max(span - stall, 0.0)
                 iters = min(exec_span / plan.latency, total_iters - done)
                 done += iters
@@ -241,7 +272,8 @@ class RuntimeAdapter:
                 spent += stall + iters * plan.latency
                 current = plan
                 trace.append(dict(t=t, plan=id(plan), frac=frac, iters=iters,
-                                  lat=plan.latency))
+                                  lat=plan.latency, stall=stall,
+                                  exec_energy=plan.energy * iters))
                 if done >= total_iters:
                     break
             # advance by the true elapsed time once the job finishes
@@ -249,6 +281,7 @@ class RuntimeAdapter:
         return dict(energy=energy, finished_at=t, done=done,
                     met_deadline=(done >= total_iters
                                   and t <= deadline * (1.0 + 1e-3)),
+                    stall_s=stall_s, stall_energy=stall_energy,
                     trace=trace)
 
     # -- continuous-workload path (Fig. 16) ------------------------------------------

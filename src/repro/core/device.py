@@ -177,6 +177,25 @@ class Topology:
     def n(self) -> int:
         return len(self.devices)
 
+    def scale_resources(self, factors: Dict[str, float]) -> "Topology":
+        """A new topology with link capacities scaled per resource name.
+
+        ``factors`` maps resource names to capacity multipliers (0.5 =
+        half the bandwidth); unnamed resources keep their capacity.
+        Routing (explicit p2p routes and shared-medium fallbacks) is
+        preserved.  The multi-tenant fleet planner uses this to price a
+        shared medium at its fluid-fair share when several tenants'
+        pipelines transfer over it concurrently.
+        """
+        bad = [n for n in factors if n not in self.resources]
+        if bad:
+            raise KeyError(f"unknown resources {sorted(bad)}; topology has "
+                           f"{sorted(self.resources)}")
+        resources = [dataclasses.replace(r, capacity=r.capacity
+                                         * factors.get(r.name, 1.0))
+                     for r in self.resources.values()]
+        return Topology(self.devices, resources, self._p2p)
+
     # -- churn (runtime join/leave) --------------------------------------------
     def subset(self, keep: Sequence[int]
                ) -> Tuple["Topology", Dict[int, int]]:

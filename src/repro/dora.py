@@ -46,7 +46,7 @@ import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .core.adapter import (AdapterConfig, DynamicsEvent, RuntimeAdapter,
-                           RuntimeState)
+                           RuntimeState, cold_load_stall)
 from .core.cost_model import CostProvider, Workload
 from .core.device import Topology
 from .core.partitioner import PartitionerConfig
@@ -602,12 +602,7 @@ class ServeSession:
         if proxy is not None:
             stall = adapter.switch_cost(proxy, new)
         else:   # nothing survives: cold-load the whole new plan
-            nbytes = max(new.device_param_bytes().values(), default=0.0)
-            bw = min((sub.peak_bandwidth(i, j)
-                      for i in new.devices for j in new.devices if i != j),
-                     default=math.inf)
-            load_t = nbytes / bw if bw != math.inf else 0.0
-            stall = adapter.config.switch_drain_s + load_t
+            stall = cold_load_stall(new, sub, adapter.config)
         new.meta["switch_stall_s"] = stall
         new.meta["fleet"] = list(keep)
         new.meta["warm_replan"] = result.warm_start
@@ -642,6 +637,58 @@ def serve(scenario: ScenarioRef, *, warm_replan: bool = True,
                         partitioner_config=planner.partitioner.config,
                         scheduler_config=planner.scheduler.config,
                         warm_replan=warm_replan)
+
+
+# -- multi-tenant fleets --------------------------------------------------------
+def plan_fleet(fleet, *, topology=None,
+               strategy="dora",
+               fleet_config=None,
+               partitioner_config: Optional[PartitionerConfig] = None,
+               scheduler_config: Optional[SchedulerConfig] = None,
+               adapter_config: Optional[AdapterConfig] = None,
+               costs: Optional[CostProvider] = None):
+    """Co-plan several workloads on one shared fleet.
+
+    ``fleet`` is a registered fleet-scenario name (``python -m
+    repro.scenarios --list --fleet``), a
+    :class:`~repro.fleet.FleetScenario`, or a plain list of tenant
+    scenario refs (then ``topology`` — or the first tenant's — is the
+    shared fleet).  Devices are assigned *exclusively* per tenant and
+    shared links are priced at their fluid-fair cross-tenant share; the
+    assignment search keeps every tenant QoE-feasible first, then
+    minimizes total energy (see :class:`repro.fleet.FleetPlanner`).
+    ``strategy`` is one name for all tenants or a ``{tenant: name}``
+    dict.  Returns a :class:`repro.fleet.FleetPlan`.
+    """
+    from .fleet import FleetPlanner, resolve_fleet
+    fs = resolve_fleet(fleet, topology=topology)
+    planner = FleetPlanner(fs.build_topology(), fs.tenants, name=fs.name,
+                           strategy=strategy, config=fleet_config,
+                           partitioner_config=partitioner_config,
+                           scheduler_config=scheduler_config,
+                           adapter_config=adapter_config, costs=costs)
+    return planner.plan()
+
+
+def serve_fleet(fleet, *, topology=None, strategy="dora",
+                fleet_config=None,
+                partitioner_config: Optional[PartitionerConfig] = None,
+                scheduler_config: Optional[SchedulerConfig] = None,
+                adapter_config: Optional[AdapterConfig] = None,
+                costs: Optional[CostProvider] = None):
+    """Co-plan a fleet and arm every tenant's runtime adapter plus the
+    cross-tenant rebalancer.  Returns a
+    :class:`repro.fleet.FleetSession` whose ``on_dynamics`` routes
+    events to the owning tenants and moves devices between tenants on
+    churn or QoE-breaking load shifts."""
+    from .fleet import FleetPlanner, FleetSession, resolve_fleet
+    fs = resolve_fleet(fleet, topology=topology)
+    planner = FleetPlanner(fs.build_topology(), fs.tenants, name=fs.name,
+                           strategy=strategy, config=fleet_config,
+                           partitioner_config=partitioner_config,
+                           scheduler_config=scheduler_config,
+                           adapter_config=adapter_config, costs=costs)
+    return FleetSession(planner, planner.plan(), scenario=fs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -716,6 +763,16 @@ def simulate(scenario: ScenarioRef,
     ``ServingLoad``), ``strategy=`` (simulate a non-adaptive baseline
     strategy instead of dora's adapter).
 
+    ``mode="fleet"`` runs the *multi-tenant* serving simulator
+    (``repro.sim.fleet``): ``scenario`` is then a fleet-scenario name /
+    :class:`repro.fleet.FleetScenario` / tenant list, every tenant gets
+    its own concurrent request stream on its exclusive device
+    allotment, and the fleet timeline flows through the cross-tenant
+    rebalancer; returns a :class:`repro.sim.fleet.FleetTrace`.  Extra
+    knobs: ``loads=`` ({tenant: ServingLoad}), ``span_s=``, ``seed=``;
+    ``session=`` takes a :class:`repro.fleet.FleetSession` from
+    ``dora.serve_fleet``.
+
     **Mutation contract:** replaying events *advances the session* —
     ``session.current`` tracks the adapter's latest plan (after churn,
     re-indexed to the surviving fleet with ``session.active`` mapping
@@ -732,9 +789,15 @@ def simulate(scenario: ScenarioRef,
             session = _copy.deepcopy(session)
         return simulate_requests(scenario, events=events, session=session,
                                  **overrides)
+    if mode == "fleet":
+        from .sim.fleet import simulate_fleet
+        if copy and session is not None:
+            session = _copy.deepcopy(session)
+        return simulate_fleet(scenario, events=events, session=session,
+                              **overrides)
     if mode != "events":
-        raise ValueError(f"unknown mode {mode!r}: expected 'events' or "
-                         f"'requests'")
+        raise ValueError(f"unknown mode {mode!r}: expected 'events', "
+                         f"'requests' or 'fleet'")
     if session is None:
         session = serve(scenario, **overrides)
     else:
@@ -764,4 +827,5 @@ __all__ = [
     "PlanReport", "ServeSession", "SimulationStep", "SimulationTrace",
     "StrategyOutcome", "ComparisonReport", "DEFAULT_COMPARISON",
     "RuntimeState", "plan", "planner_for", "serve", "simulate", "compare",
+    "plan_fleet", "serve_fleet",
 ]

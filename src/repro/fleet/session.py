@@ -1,0 +1,261 @@
+"""The armed multi-tenant runtime: per-tenant adapters + rebalancing.
+
+A :class:`FleetSession` is to a fleet what
+:class:`~repro.dora.ServeSession` is to one workload.  It keeps one
+ServeSession per tenant (each with its runtime adapter armed over the
+tenant's candidate pool) plus the *fleet-level* cumulative picture:
+
+* Non-churn dynamics events are translated into each tenant's device
+  space and routed to its adapter — a compute-speed drop on a device
+  only stirs the tenant that owns it; a shared-link bandwidth shift
+  reaches every tenant on the medium.
+* Device ``leave``/``join`` churn — and load shifts that leave a tenant
+  QoE-infeasible — trigger a **rebalance**: the
+  :class:`~repro.fleet.planner.FleetPlanner` search re-runs on the
+  surviving fleet under the accumulated conditions, warm-starting every
+  dora tenant from its surviving candidate pool
+  (:meth:`DoraPlanner.replan`) and always pricing the incumbent
+  assignment so devices only move when moving wins.  Each re-assigned
+  tenant's migration stall is priced by the adapter's delta-switching
+  model against its previous plan re-indexed into the new allotment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Tuple
+
+from ..core.adapter import DynamicsEvent, RuntimeAdapter, RuntimeState, \
+    cold_load_stall
+from ..core.scheduler import NetworkScheduler
+from ..dora import ServeSession, _remap_plan
+from .planner import FleetPlan, FleetPlanner, TenantPlan, _translate
+
+
+def _orig_placement(plan, tp: TenantPlan) -> tuple:
+    """A tenant-local plan's placement signature in *fleet* device space
+    (which model nodes sit on which physical devices)."""
+    inv = {loc: orig for orig, loc in tp.mapping.items()}
+    return tuple((tuple(s.node_ids), tuple(sorted(inv[d] for d in s.devices)))
+                 for s in plan.stages)
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantAction:
+    """What the fleet runtime did about one event, for one tenant."""
+
+    tenant: str
+    action: str            # "reschedule" | "replan" | "rebalance"
+    react_s: float
+    stall_s: float
+    latency_after: float
+    allotment: Tuple[int, ...]
+
+
+class FleetSession:
+    """N tenant sessions + the rebalancer that moves devices between
+    them.  ``sessions[name].current`` is tenant-local; map back to
+    fleet ids via ``plan.tenants[name].allotment``."""
+
+    def __init__(self, planner: FleetPlanner, plan: FleetPlan,
+                 scenario=None):
+        self.planner = planner
+        self.plan = plan
+        self.scenario = scenario        # FleetScenario (or None for ad-hoc)
+        self.state = RuntimeState()     # fleet-space cumulative conditions
+        self.active: Tuple[int, ...] = tuple(range(planner.topo.n))
+        self.rebalances = 0
+        self.sessions: Dict[str, ServeSession] = {}
+        for name, tp in plan.tenants.items():
+            self.sessions[name] = self._arm_tenant(tp)
+
+    # -- wiring -------------------------------------------------------------------
+    def _arm_tenant(self, tp: TenantPlan,
+                    state: Optional[RuntimeState] = None) -> ServeSession:
+        report = tp.report
+        scheduler = NetworkScheduler(report.topology, report.qoe,
+                                     self.planner.scheduler_config)
+        adapter = RuntimeAdapter(report.candidates, report.topology,
+                                 report.qoe, scheduler,
+                                 self.planner.adapter_config)
+        current = report.best
+        local = state or RuntimeState()
+        if local.compute_speed or local.bandwidth_scale:
+            current = scheduler.refine(
+                current, compute_speed=dict(local.compute_speed),
+                bandwidth_scale=dict(local.bandwidth_scale))
+        return ServeSession(report=report, adapter=adapter, current=current,
+                            state=local,
+                            partitioner_config=self.planner.partitioner_config,
+                            scheduler_config=self.planner.scheduler_config)
+
+    def _local_state(self, tp: TenantPlan,
+                     merged: RuntimeState) -> RuntimeState:
+        kw = _translate(merged, tp.mapping, tp.report.topology)
+        return RuntimeState(compute_speed=kw["compute_speed"],
+                            bandwidth_scale=kw["bandwidth_scale"])
+
+    def _local_event(self, tp: TenantPlan,
+                     event: DynamicsEvent) -> Optional[DynamicsEvent]:
+        """``event`` in the tenant's device space, or ``None`` when it
+        doesn't touch this tenant's devices or links at all."""
+        speed = {tp.mapping[d]: v for d, v in event.compute_speed.items()
+                 if d in tp.mapping}
+        bw = {r: v for r, v in event.bandwidth_scale.items()
+              if r in tp.report.topology.resources}
+        if not speed and not bw:
+            return None
+        return DynamicsEvent(t=event.t, compute_speed=speed,
+                             bandwidth_scale=bw)
+
+    # -- properties ---------------------------------------------------------------
+    @property
+    def assignments(self) -> Dict[str, Tuple[int, ...]]:
+        return self.plan.assignments
+
+    @property
+    def meets_qoe(self) -> bool:
+        return all(s.meets_qoe for s in self.sessions.values())
+
+    def tenant(self, name: str) -> ServeSession:
+        return self.sessions[name]
+
+    # -- dynamics -----------------------------------------------------------------
+    def on_dynamics(self, event: DynamicsEvent) -> List[TenantAction]:
+        """Feed one fleet-space runtime event to every affected tenant.
+
+        Churn always rebalances; condition shifts route to the owning
+        tenants' adapters, then trigger a rebalance if some tenant is
+        left QoE-infeasible (and ``FleetConfig.rebalance_on_load``).
+        Returns the actions taken, one per affected tenant.
+        """
+        if event.is_churn:
+            return self._rebalance(event)
+        merged = self.state.apply(event)
+        actions: List[TenantAction] = []
+        for name, tp in self.plan.tenants.items():
+            local = self._local_event(tp, event)
+            if local is None:
+                continue
+            sess = self.sessions[name]
+            new, act, react = sess.on_dynamics(local)
+            stall = (float(new.meta.get("switch_stall_s", 0.0))
+                     if act == "replan" else 0.0)
+            actions.append(TenantAction(tenant=name, action=act,
+                                        react_s=react, stall_s=stall,
+                                        latency_after=new.latency,
+                                        allotment=tp.allotment))
+        self.state = merged
+        if (self.planner.config.rebalance_on_load
+                and any(not s.meets_qoe for s in self.sessions.values())):
+            actions += self._rebalance(None)
+        return actions
+
+    def _rebalance(self, event: Optional[DynamicsEvent]
+                   ) -> List[TenantAction]:
+        """Re-run the assignment search on the surviving fleet and move
+        devices between tenants; no-op when the incumbent assignment is
+        still the joint winner."""
+        t0 = time.perf_counter()
+        if event is not None:
+            full_n = self.planner.topo.n
+            bad = [d for d in (*event.leave, *event.join)
+                   if not (0 <= d < full_n)]
+            if bad:
+                raise ValueError(f"churn references unknown devices {bad} "
+                                 f"(fleet has {full_n})")
+            fleet = (set(self.active) - set(event.leave)) | set(event.join)
+            if len(fleet) < len(self.planner.tenants):
+                raise ValueError(
+                    f"churn leaves {sorted(fleet)}: not enough devices for "
+                    f"{len(self.planner.tenants)} exclusive tenants")
+            merged = self.state.apply(event)
+        else:
+            fleet = set(self.active)
+            merged = self.state
+        warm = {name: (list(sess.plans), self.plan.tenants[name].allotment)
+                for name, sess in self.sessions.items()}
+        conditions = merged if (merged.compute_speed
+                                or merged.bandwidth_scale) else None
+        new_plan = self.planner.plan(devices=sorted(fleet), warm=warm,
+                                     conditions=conditions,
+                                     include=[self.plan.assignments])
+        if (event is None
+                and new_plan.assignments == self.plan.assignments):
+            # load-shift probe: moving devices doesn't help — stay put
+            return []
+        actions: List[TenantAction] = []
+        old_plan = self.plan
+        # a kept session is only valid if its shared-link pricing is
+        # unchanged too — another tenant's move can change the medium's
+        # user count and with it this tenant's fair share
+        shares_of = self.planner.link_shares
+        old_shares = shares_of(list(old_plan.assignments.values()))
+        new_shares = shares_of(list(new_plan.assignments.values()))
+        new_sessions: Dict[str, ServeSession] = {}
+        for name, tp in new_plan.tenants.items():
+            old_tp = old_plan.tenants.get(name)
+            if (old_tp is not None and old_tp.allotment == tp.allotment
+                    and self.planner._factors_key(tp.allotment, old_shares)
+                    == self.planner._factors_key(tp.allotment, new_shares)):
+                # same allotment, same link shares: keep the tenant's
+                # adapted session (pareto pool and cumulative state are
+                # already right) — but a churn event can carry condition
+                # shifts too, and those must still reach the tenant
+                sess = self.sessions[name]
+                local = self._local_event(tp, event) \
+                    if event is not None else None
+                if local is not None:
+                    new, act, react = sess.on_dynamics(local)
+                    actions.append(TenantAction(
+                        tenant=name, action=act, react_s=react,
+                        stall_s=(float(new.meta.get("switch_stall_s", 0.0))
+                                 if act == "replan" else 0.0),
+                        latency_after=new.latency,
+                        allotment=tp.allotment))
+                new_sessions[name] = sess
+                continue
+            sess = self._arm_tenant(tp, state=self._local_state(tp, merged))
+            stall = 0.0
+            if old_tp is not None:
+                old_current = self.sessions[name].current
+                if (_orig_placement(old_current, old_tp)
+                        != _orig_placement(sess.current, tp)):
+                    # only a placement that actually moved pays migration
+                    stall = self._migration_stall(
+                        old_current, old_tp, tp, sess)
+            sess.current.meta["switch_stall_s"] = stall
+            sess.current.meta["fleet"] = list(tp.allotment)
+            new_sessions[name] = sess
+            actions.append(TenantAction(
+                tenant=name, action="rebalance",
+                react_s=time.perf_counter() - t0, stall_s=stall,
+                latency_after=sess.current.latency,
+                allotment=tp.allotment))
+        self.plan = new_plan
+        self.sessions = new_sessions
+        self.active = tuple(sorted(fleet))
+        self.state = merged
+        self.rebalances += 1
+        if event is not None and not actions:
+            # churn that didn't move any allotment still reacted
+            actions.append(TenantAction(
+                tenant="*", action="rebalance",
+                react_s=time.perf_counter() - t0, stall_s=0.0,
+                latency_after=math.nan, allotment=self.active))
+        return actions
+
+    def _migration_stall(self, old_current, old_tp: TenantPlan,
+                         new_tp: TenantPlan, sess: ServeSession) -> float:
+        """Delta-switching stall of moving one tenant between
+        allotments: its old plan re-indexed into the new device space
+        prices the layers already resident."""
+        trans = {old_tp.mapping[orig]: new_tp.mapping[orig]
+                 for orig in old_tp.allotment if orig in new_tp.mapping}
+        proxy = _remap_plan(old_current, trans)
+        new = sess.current
+        if proxy is not None:
+            return sess.adapter.switch_cost(proxy, new)
+        return cold_load_stall(new, new_tp.report.topology,
+                               sess.adapter.config)

@@ -20,6 +20,17 @@ request-level serving simulator (open-loop arrivals at the scenario's
 registered rate, timeline + churn included) and reports p50/p95/p99
 latency, SLO attainment and energy; ``--json PATH`` writes everything
 the run produced as one machine-readable artifact.
+
+``--fleet`` switches both ``--list`` and ``--run`` to the multi-tenant
+fleet registry (``repro.fleet``)::
+
+    PYTHONPATH=src python -m repro.scenarios --list --fleet
+    PYTHONPATH=src python -m repro.scenarios --run smart_home_assist --fleet
+    PYTHONPATH=src python -m repro.scenarios --run all --fleet --requests
+
+``--run NAME --fleet`` co-plans the fleet (``dora.plan_fleet``) and
+prints every tenant's allotment + QoE verdict; ``--requests`` then runs
+the multi-tenant serving simulator on the fleet timeline.
 """
 from __future__ import annotations
 
@@ -43,6 +54,57 @@ def _print_listing(tag: str = None) -> None:
     for r in rows:
         print("  ".join(v.ljust(w) for v, w in zip(r, widths)))
     print(f"\n{len(rows)} scenarios registered")
+
+
+def _print_fleet_listing(tag: str = None) -> None:
+    from ..fleet import iter_fleets
+    rows = [f.summary_row() for f in iter_fleets(tag)]
+    headers = ("name", "tenants", "devs", "description")
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(headers)]
+    print("  ".join(h.ljust(w) for h, w in zip(headers, widths)))
+    print("  ".join("-" * w for w in widths))
+    for r in rows:
+        print("  ".join(v.ljust(w) for v, w in zip(r, widths)))
+    print(f"\n{len(rows)} fleet scenarios registered")
+
+
+def _run_fleets(names: List[str], requests: bool,
+                json_path: Optional[str]) -> int:
+    from .. import dora
+    failures = 0
+    artifact: Dict[str, Dict[str, object]] = {}
+    for name in names:
+        entry: Dict[str, object] = {}
+        artifact[name] = entry
+        print(f"\n===== {name} " + "=" * max(0, 60 - len(name)))
+        try:
+            session = dora.serve_fleet(name)
+        except Exception as e:  # noqa: BLE001 — keep sweeping on failure
+            print(f"[ERROR] fleet planning failed: {type(e).__name__}: {e}")
+            entry["error"] = f"{type(e).__name__}: {e}"
+            failures += 1
+            continue
+        print(session.plan.summary())
+        entry["plan"] = session.plan.to_dict()
+        if not session.plan.feasible:
+            failures += 1
+        if requests:
+            print("\nmulti-tenant serving simulation:")
+            try:
+                trace = dora.simulate(name, mode="fleet", session=session)
+                print(trace.summary())
+                entry["serving"] = trace.to_dict()
+            except Exception as e:  # noqa: BLE001 — keep sweeping
+                print(f"[ERROR] fleet sim failed: {type(e).__name__}: {e}")
+                entry["serving_error"] = f"{type(e).__name__}: {e}"
+                failures += 1
+    if json_path is not None:
+        with open(json_path, "w", encoding="utf-8") as f:
+            json.dump({"fleets": artifact}, f, indent=2, allow_nan=False)
+            f.write("\n")
+        print(f"\nwrote {json_path}")
+    return failures
 
 
 def _run(names: List[str], strategy: str, compare: Optional[Sequence[str]],
@@ -145,6 +207,11 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default=None, metavar="PATH", dest="json_path",
                     help="with --run: write plans/comparisons/traces as one "
                          "machine-readable JSON artifact")
+    ap.add_argument("--fleet", action="store_true",
+                    help="operate on the multi-tenant fleet registry: "
+                         "--list prints it, --run co-plans fleets "
+                         "(dora.plan_fleet) and --requests runs the "
+                         "multi-tenant serving simulator")
     args = ap.parse_args(argv)
 
     if args.strategies:
@@ -152,6 +219,14 @@ def main(argv=None) -> int:
             print(name)
         print(f"\n{len(list_strategies())} strategies registered")
         return 0
+    if args.fleet:
+        from ..fleet import list_fleets
+        if args.list or not args.run:
+            _print_fleet_listing(args.tag)
+            return 0
+        names = (list_fleets(args.tag) if args.run == ["all"]
+                 else list(args.run))
+        return _run_fleets(names, args.requests, args.json_path)
     if args.list or not args.run:
         _print_listing(args.tag)
         return 0

@@ -14,6 +14,7 @@ from ..strategies.baselines import (BaselineError, alpa_plan, asteroid_plan,
 from .runner import (COMPARISON_PLANNERS, ExecResult, compare_planners,
                      dora_plan, execute_plan, run_strategy, scenario_case,
                      setting_and_graph, workload_for)
+from .fleet import FleetAction, FleetTrace, simulate_fleet
 from .serving import (AdapterAction, RequestRecord, ServingLoad, ServingTrace,
                       poisson_arrivals, simulate_requests)
 
@@ -24,4 +25,5 @@ __all__ = [
     "scenario_case", "setting_and_graph", "workload_for",
     "AdapterAction", "RequestRecord", "ServingLoad", "ServingTrace",
     "poisson_arrivals", "simulate_requests",
+    "FleetAction", "FleetTrace", "simulate_fleet",
 ]

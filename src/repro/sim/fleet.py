@@ -1,0 +1,303 @@
+"""Multi-tenant request-level serving: N concurrent streams, one fleet.
+
+Extends :mod:`repro.sim.serving` to a co-planned fleet: every tenant
+gets its own open-loop Poisson arrival stream (at its registered
+``request_rate``) served by its own pipeline on its *exclusive* device
+allotment, while the fleet timeline (bandwidth/compute shifts and
+device churn) plays out through the :class:`~repro.fleet.FleetSession`
+— rebalances move devices between tenants mid-run and bill each moved
+tenant's migration stall against its own admissions.
+
+Bookkeeping follows the single-tenant fluid model per tenant:
+admissions at the plan's bottleneck interval, per-request non-idle
+energy on the tenant's devices.  Fleet-level attribution:
+
+* **Idle draw** is billed once per fleet device over the whole horizon
+  and attributed to the tenant owning the device at the end of the run
+  (devices that changed hands mid-run stay whole — conservative and
+  simple); devices owned by no tenant land in the fleet-wide totals
+  only.
+* **Oversubscription** is checked, not clamped: summing every tenant's
+  compute-busy seconds per device must stay within the horizon, since
+  allotments are exclusive — :meth:`FleetTrace.oversubscribed_devices`
+  must come back empty, and the fleet tests assert it.
+
+Entry points: :func:`simulate_fleet`, also reachable as
+``dora.simulate(fleet, mode="fleet")``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+from ..core.adapter import DynamicsEvent
+from ..dora import _json_num
+from .serving import (DEFAULT_N_REQUESTS, AdapterAction, RequestRecord,
+                      ServingLoad, ServingTrace, _ActivePlan, _freeze,
+                      normalize_timeline, poisson_arrivals)
+
+#: Seed stride between tenants so their arrival processes are
+#: independent but each stays deterministic per (fleet seed, tenant).
+_TENANT_SEED_STRIDE = 9973
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetAction:
+    """One tenant-visible runtime reaction during a fleet run."""
+
+    t: float
+    label: str
+    tenant: str
+    action: str             # "reschedule" | "replan" | "rebalance"
+    react_s: float
+    stall_s: float
+    latency_after: float
+    allotment: Tuple[int, ...]
+
+
+@dataclasses.dataclass
+class FleetTrace:
+    """Everything one multi-tenant serving simulation produced."""
+
+    fleet: str
+    tenants: "OrderedDict[str, ServingTrace]"
+    actions: List[FleetAction]
+    assignments: Dict[str, Tuple[int, ...]]   # final allotments
+    per_device_energy: Dict[int, float]       # fleet-wide, idle billed once
+    per_device_busy: Dict[int, float]         # summed across tenants
+    horizon_s: float
+    rebalances: int
+
+    @property
+    def energy(self) -> float:
+        return sum(self.per_device_energy.values())
+
+    @property
+    def slo_attainment(self) -> float:
+        """Worst tenant's SLO attainment (the fleet is only as good as
+        its unhappiest tenant)."""
+        return min((t.slo_attainment for t in self.tenants.values()),
+                   default=1.0)
+
+    @property
+    def n_failed(self) -> int:
+        return sum(t.n_failed for t in self.tenants.values())
+
+    def utilization(self, device: int) -> float:
+        if self.horizon_s <= 0.0:
+            return 0.0
+        return self.per_device_busy.get(device, 0.0) / self.horizon_s
+
+    @property
+    def oversubscribed_devices(self) -> List[int]:
+        """Devices booked for more compute-seconds than the run holds —
+        always empty under exclusive allotments (asserted by tests)."""
+        return sorted(d for d in self.per_device_busy
+                      if self.utilization(d) > 1.0 + 1e-6)
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "fleet": self.fleet,
+            "horizon_s": _json_num(self.horizon_s),
+            "energy_j": _json_num(self.energy),
+            "slo_attainment_worst": self.slo_attainment,
+            "failed_requests": self.n_failed,
+            "rebalances": self.rebalances,
+            "assignments": {k: list(v)
+                            for k, v in self.assignments.items()},
+            "per_device_energy_j": {str(d): _json_num(e) for d, e in
+                                    sorted(self.per_device_energy.items())},
+            "per_device_utilization": {str(d): self.utilization(d) for d in
+                                       sorted(self.per_device_energy)},
+            "oversubscribed_devices": self.oversubscribed_devices,
+            "tenants": {name: t.to_dict()
+                        for name, t in self.tenants.items()},
+            "actions": [{
+                "t": a.t, "label": a.label, "tenant": a.tenant,
+                "action": a.action, "react_s": _json_num(a.react_s),
+                "stall_s": _json_num(a.stall_s),
+                "latency_after_s": _json_num(a.latency_after),
+                "allotment": list(a.allotment),
+            } for a in self.actions],
+        }
+
+    def summary(self) -> str:
+        lines = [f"fleet {self.fleet}: {len(self.tenants)} tenants over "
+                 f"{self.horizon_s:.1f}s, total energy {self.energy:.1f} J"
+                 f", {self.rebalances} rebalances"]
+        for name, t in self.tenants.items():
+            def fmt(x: float) -> str:
+                return (f"{x * 1e3:.0f} ms" if math.isfinite(x)
+                        else "unserved")
+            lines.append(
+                f"  {name:24s} devs={list(self.assignments[name])!s:12s} "
+                f"{len(t.requests)} reqs @ {t.load.rate:g}/s  "
+                f"p50/p99 {fmt(t.p50)}/{fmt(t.p99)}  "
+                f"SLO {t.slo_attainment:.1%}")
+        for a in self.actions:
+            stall = f" stall {a.stall_s:.2f}s" if a.stall_s > 0 else ""
+            lines.append(f"  t={a.t:6.1f}s  [{a.tenant}] {a.label:40s} -> "
+                         f"{a.action}{stall}")
+        return "\n".join(lines)
+
+
+def _default_span(timeline) -> float:
+    last = max((ev.t for _, ev in timeline), default=0.0)
+    return max(60.0, last * 1.25)
+
+
+def simulate_fleet(fleet, *,
+                   loads: Optional[Dict[str, ServingLoad]] = None,
+                   events=None,
+                   session=None,
+                   span_s: Optional[float] = None,
+                   seed: int = 0,
+                   **overrides) -> FleetTrace:
+    """Run one multi-tenant request-level serving simulation.
+
+    ``fleet`` — a registered fleet-scenario name, a
+    :class:`~repro.fleet.FleetScenario`, or a list of tenant scenario
+    refs.  ``loads`` overrides per-tenant :class:`ServingLoad`\\ s; by
+    default each tenant arrives at its registered ``request_rate`` for
+    ``span_s`` seconds (default: 60 s or 1.25x the last timeline
+    event).  ``events`` overrides the fleet timeline.  Pass an armed
+    ``session=`` (from ``dora.serve_fleet``) to reuse its plans;
+    keyword ``overrides`` otherwise flow to ``dora.serve_fleet``.
+    """
+    from .. import dora            # local import: dora lazily imports sims
+    from ..fleet import resolve_fleet
+
+    topology = overrides.pop("topology", None)
+    fs = resolve_fleet(fleet, topology=topology)
+    if session is None:
+        session = dora.serve_fleet(fs, **overrides)
+    else:
+        have = session.scenario.name if session.scenario is not None \
+            else session.plan.name
+        if have != fs.name:
+            raise ValueError(f"session was armed for fleet {have!r}, "
+                             f"not {fs.name!r}")
+        if overrides or topology is not None:
+            raise ValueError("overrides are ignored when reusing a "
+                             "session; pass them to dora.serve_fleet")
+    topo = session.planner.topo
+    timeline = normalize_timeline(
+        events if events is not None else fs.timeline)
+    span = span_s if span_s is not None else _default_span(timeline)
+
+    names = [t.name for t in fs.tenants]
+    tenant_loads: Dict[str, ServingLoad] = {}
+    arrivals: List[Tuple[float, str]] = []
+    for i, tn in enumerate(fs.tenants):
+        load = (loads or {}).get(tn.name)
+        if load is None:
+            active0 = session.sessions[tn.name].current
+            rate = tn.request_rate or 0.5 / max(active0.latency, 1e-9)
+            n = max(8, min(int(math.ceil(rate * span)),
+                           2 * DEFAULT_N_REQUESTS))
+            load = ServingLoad(rate=rate, n_requests=n,
+                               seed=seed + i * _TENANT_SEED_STRIDE)
+        tenant_loads[tn.name] = load
+        for a in poisson_arrivals(load.rate, load.n_requests, load.seed):
+            arrivals.append((float(a), tn.name))
+    arrivals.sort()
+
+    def freeze(name: str) -> _ActivePlan:
+        tp = session.plan.tenants[name]
+        return _freeze(session.sessions[name].current, tp.allotment)
+
+    active: Dict[str, _ActivePlan] = {n: freeze(n) for n in names}
+    next_free: Dict[str, float] = {n: 0.0 for n in names}
+    records: Dict[str, List[RequestRecord]] = {n: [] for n in names}
+    actions: List[FleetAction] = []
+    service_energy: Dict[str, Dict[int, float]] = {n: {} for n in names}
+    busy: Dict[str, Dict[int, float]] = {n: {} for n in names}
+
+    def fire(label: str, ev: DynamicsEvent) -> None:
+        reacted = session.on_dynamics(ev)
+        for act in reacted:
+            if act.tenant not in active:     # whole-fleet marker row
+                actions.append(FleetAction(
+                    t=ev.t, label=label, tenant=act.tenant,
+                    action=act.action, react_s=act.react_s,
+                    stall_s=act.stall_s, latency_after=act.latency_after,
+                    allotment=act.allotment))
+                continue
+            if act.stall_s > 0.0:
+                next_free[act.tenant] = (max(next_free[act.tenant], ev.t)
+                                         + act.stall_s)
+            actions.append(FleetAction(
+                t=ev.t, label=label, tenant=act.tenant, action=act.action,
+                react_s=act.react_s, stall_s=act.stall_s,
+                latency_after=act.latency_after, allotment=act.allotment))
+        if reacted:
+            for n in names:                  # allotments may have moved
+                active[n] = freeze(n)
+
+    ev_i = 0
+    for a, name in arrivals:
+        while ev_i < len(timeline) and timeline[ev_i][1].t <= a:
+            fire(*timeline[ev_i])
+            ev_i += 1
+        plan = active[name]
+        start = max(a, next_free[name])
+        finish = start + plan.latency
+        next_free[name] = start + plan.interval
+        records[name].append(RequestRecord(arrival=a, start=start,
+                                           finish=finish))
+        acc = service_energy[name]
+        for d, e in plan.per_device_energy.items():
+            non_idle = e - topo.devices[d].p_idle * plan.latency
+            acc[d] = acc.get(d, 0.0) + max(non_idle, 0.0)
+        for d, b in plan.compute_busy.items():
+            busy[name][d] = busy[name].get(d, 0.0) + b
+    while ev_i < len(timeline):
+        fire(*timeline[ev_i])
+        ev_i += 1
+
+    horizon = max([0.0,
+                   *(a for a, _ in arrivals),
+                   *(r.finish for rs in records.values() for r in rs
+                     if r.served),
+                   *(ev.t for _, ev in timeline)])
+
+    # -- energy attribution: idle once per device, service to its tenant
+    final = session.plan.assignments
+    fleet_energy: Dict[int, float] = {
+        d: dev.p_idle * horizon for d, dev in enumerate(topo.devices)}
+    traces: "OrderedDict[str, ServingTrace]" = OrderedDict()
+    fleet_busy: Dict[int, float] = {}
+    for tn in fs.tenants:
+        name = tn.name
+        load = tenant_loads[name]
+        for d, e in service_energy[name].items():
+            fleet_energy[d] = fleet_energy.get(d, 0.0) + e
+        for d, b in busy[name].items():
+            fleet_busy[d] = fleet_busy.get(d, 0.0) + b
+        tenant_energy = dict(service_energy[name])
+        for d in final.get(name, ()):
+            tenant_energy[d] = tenant_energy.get(d, 0.0) \
+                + topo.devices[d].p_idle * horizon
+        slo = load.slo_s if load.slo_s is not None else tn.qoe.t_qoe
+        traces[name] = ServingTrace(
+            scenario=f"{fs.name}/{name}", strategy="fleet", load=load,
+            slo_s=slo, requests=records[name],
+            actions=[AdapterAction(t=a.t, label=a.label, action=a.action,
+                                   react_s=a.react_s, stall_s=a.stall_s,
+                                   latency_after=a.latency_after)
+                     for a in actions if a.tenant == name],
+            per_device_energy=tenant_energy,
+            per_device_busy=dict(busy[name]),
+            horizon_s=float(horizon))
+
+    return FleetTrace(fleet=fs.name, tenants=traces, actions=actions,
+                      assignments={k: tuple(v) for k, v in final.items()},
+                      per_device_energy=fleet_energy,
+                      per_device_busy=fleet_busy,
+                      horizon_s=float(horizon),
+                      rebalances=session.rebalances)
+
+
+__all__ = ["FleetAction", "FleetTrace", "simulate_fleet"]

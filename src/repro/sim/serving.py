@@ -11,10 +11,12 @@ planning stack:
   trace.
 * **Service** — a fluid pipeline model of the active plan: a request
   admitted at ``s`` finishes at ``s + plan.latency``; the pipeline
-  admits the next request after the bottleneck-stage interval
-  (``latency / n_stages`` for inference — stages overlap across
-  requests; full ``latency`` for training, where the flush + gradient
-  sync serialize iterations).  Service time is sampled at admission.
+  admits the next request after the bottleneck interval (the busiest
+  stage executor / network resource per request from the Phase-2
+  schedule — stages overlap across requests, so throughput is bounded
+  by the slowest stage, not the average; full ``latency`` for
+  training, where the flush + gradient sync serialize iterations).
+  Service time is sampled at admission.
 * **Dynamics** — the scenario's timeline plays out mid-run.  With the
   ``dora`` strategy, events flow through the armed
   :class:`~repro.dora.ServeSession` (cumulative conditions, §4.3
@@ -137,9 +139,28 @@ class _ActivePlan:
 def _service_interval(plan: ParallelismPlan) -> float:
     """Steady-state admission interval of the pipeline (fluid model):
     inference requests overlap across stages; training iterations
-    serialize on the pipeline flush + gradient sync."""
+    serialize on the pipeline flush + gradient sync.
+
+    A pipeline's steady-state throughput is bounded by its *bottleneck*
+    — the busiest stage executor (or network resource) per request —
+    not by the average stage span.  Refined plans carry a Phase-2
+    schedule whose per-executor busy seconds give that bound exactly;
+    admitting any faster would oversubscribe the bottleneck device.
+    Unrefined plans (no schedule) fall back to the balanced-pipeline
+    approximation ``latency / n_stages``.
+    """
     if plan.training:
         return max(plan.latency, 1e-9)
+    sched = plan.schedule
+    if sched is not None and hasattr(sched, "busy_seconds"):
+        spans = [sched.busy_seconds(f"exec{i}")
+                 for i in range(plan.n_stages)]
+        spans += list(getattr(sched, "resource_busy", {}).values())
+        bottleneck = max((s for s in spans if s), default=0.0)
+        if bottleneck > 0.0:
+            # the bottleneck span never exceeds the makespan, but guard
+            # against hand-built schedules that claim otherwise
+            return max(min(bottleneck, plan.latency), 1e-9)
     return max(plan.latency / max(plan.n_stages, 1), 1e-9)
 
 
@@ -191,11 +212,28 @@ class ServingTrace:
     horizon_s: float
 
     def utilization(self, device: int) -> float:
-        """Fraction of the run this device spent computing."""
+        """Fraction of the run this device spent computing.
+
+        The *raw* busy/horizon ratio — a value above 1.0 means the
+        admission policy oversubscribed the device (more compute-seconds
+        queued than wall-clock available).  The old silent clamp to 1.0
+        hid exactly that signal from the multi-tenant path; use
+        :meth:`oversubscribed` for the boolean verdict.
+        """
         if self.horizon_s <= 0.0:
             return 0.0
-        return min(self.per_device_busy.get(device, 0.0) / self.horizon_s,
-                   1.0)
+        return self.per_device_busy.get(device, 0.0) / self.horizon_s
+
+    def oversubscribed(self, device: int, tol: float = 1e-6) -> bool:
+        """True when more busy-seconds were booked on ``device`` than the
+        run's horizon holds — the plan (or a co-tenant) admitted faster
+        than the device can serve."""
+        return self.utilization(device) > 1.0 + tol
+
+    @property
+    def oversubscribed_devices(self) -> List[int]:
+        return sorted(d for d in self.per_device_busy
+                      if self.oversubscribed(d))
 
     # -- latency distribution ---------------------------------------------------
     def latencies(self) -> np.ndarray:
@@ -266,6 +304,7 @@ class ServingTrace:
             "per_device_utilization": {str(d): self.utilization(d)
                                        for d in
                                        sorted(self.per_device_energy)},
+            "oversubscribed_devices": self.oversubscribed_devices,
             "horizon_s": _json_num(self.horizon_s),
             "actions": [{
                 "t": a.t, "label": a.label, "action": a.action,

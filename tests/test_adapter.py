@@ -138,3 +138,56 @@ def test_switch_cost_delta_less_than_full(adapter):
     delta = RuntimeAdapter(adapter.all_plans, adapter.topo, adapter.qoe,
                            adapter.scheduler, cfg_delta).switch_cost(a, b)
     assert delta <= full + 1e-9
+
+
+# -- regression: migration stalls draw idle power --------------------------------
+def _stall_fixture(drain: float):
+    """Two single-device plans whose LP mixture forces A<->B switching
+    every horizon: A is slow-and-cheap, B fast-and-pricey, and the
+    deadline needs more throughput than A alone delivers."""
+    from repro.core.device import CATALOG, Topology
+    devs = [CATALOG["rtx4050"], CATALOG["rtx4050"]]   # p_idle = 14 W each
+    topo = Topology.shared_medium(devs, 600.0)
+    qoe = QoESpec(t_qoe=1.0, lam=10.0)
+
+    def mk(lat, energy, node, dev):
+        st_ = Stage(node_ids=[node], devices=[dev],
+                    microbatch_split={dev: 1.0}, param_bytes=8e6)
+        return ParallelismPlan(stages=[st_], microbatch_size=1,
+                               n_microbatches=1, latency=lat, energy=energy,
+                               per_device_energy={dev: energy},
+                               objective=qoe.objective(energy, lat))
+
+    plans = [mk(1.0, 10.0, 0, 0), mk(0.5, 100.0, 1, 1)]
+    adapter = RuntimeAdapter(plans, topo, qoe, NetworkScheduler(topo, qoe),
+                             AdapterConfig(switch_drain_s=drain,
+                                           horizon_s=10.0,
+                                           async_switching=False))
+    return topo, adapter
+
+
+def test_interruptible_bills_stall_idle_energy():
+    """Pre-fix, run_interruptible advanced time through switch stalls
+    but billed zero joules for them — devices draw idle power while
+    migrating.  Total energy must be the executed iterations' energy
+    PLUS idle draw over every stall second."""
+    topo, adapter = _stall_fixture(drain=2.0)
+    res = adapter.run_interruptible(60.0, 60.0)
+    assert res["stall_s"] > 0.0                     # switching happened
+    exec_energy = sum(r["exec_energy"] for r in res["trace"])
+    idle_w = sum(d.p_idle for d in topo.devices)    # both devices involved
+    assert res["stall_energy"] == pytest.approx(idle_w * res["stall_s"])
+    assert res["energy"] == pytest.approx(exec_energy + res["stall_energy"])
+    assert res["energy"] > exec_energy              # strictly raised
+
+
+def test_interruptible_frequent_switching_raises_energy():
+    """The same job with stalls vs without: migration churn costs
+    visible energy, not just time."""
+    _, still = _stall_fixture(drain=0.0)
+    _, churny = _stall_fixture(drain=2.0)
+    base = still.run_interruptible(60.0, 60.0)
+    churned = churny.run_interruptible(60.0, 60.0)
+    assert base["stall_energy"] == 0.0
+    assert churned["stall_energy"] > 100.0          # ~28 W x many stalls
+    assert churned["energy"] > base["energy"]

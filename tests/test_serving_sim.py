@@ -401,3 +401,68 @@ def test_catalog_scenario_requests_mode(name):
     assert trace.energy > 0.0
     if name == "traffic_monitor":
         assert trace.replans == 2               # leave + rejoin
+
+
+# -- regression: bottleneck-stage admission interval ------------------------------
+def test_service_interval_uses_bottleneck_stage():
+    """A pipeline's steady-state throughput is bounded by its slowest
+    stage, not the average: with exec spans 0.9/0.1 s the admission
+    interval must be 0.9 s (pre-fix: latency/n_stages = 0.5 s, which
+    oversubscribes the bottleneck device 1.8x)."""
+    from repro.core.engine import ScheduleResult
+    from repro.sim.serving import _service_interval
+
+    def mk(training=False, sched=None, lat=1.0, n=2):
+        stages = [Stage(node_ids=[i], devices=[i], microbatch_split={i: 1.0})
+                  for i in range(n)]
+        p = ParallelismPlan(stages=stages, microbatch_size=1,
+                            n_microbatches=1, training=training, latency=lat)
+        p.schedule = sched
+        return p
+
+    unbalanced = ScheduleResult(makespan=1.0, start={}, finish={},
+                                resource_busy={},
+                                device_busy={"exec0": 0.9, "exec1": 0.1})
+    assert _service_interval(mk(sched=unbalanced)) == pytest.approx(0.9)
+    # unrefined plans keep the balanced-pipeline approximation
+    assert _service_interval(mk()) == pytest.approx(0.5)
+    # training serializes on the flush regardless of stage balance
+    assert _service_interval(mk(training=True, sched=unbalanced)) \
+        == pytest.approx(1.0)
+    # a saturated network resource bounds admission too
+    comm_bound = ScheduleResult(makespan=1.0, start={}, finish={},
+                                resource_busy={"wifi": 0.8},
+                                device_busy={"exec0": 0.2, "exec1": 0.2})
+    assert _service_interval(mk(sched=comm_bound)) == pytest.approx(0.8)
+
+
+def test_refined_plans_never_admit_past_device_capacity():
+    """With bottleneck admission, booked compute-seconds per device can
+    never exceed the horizon even at saturating arrival rates (pre-fix
+    the per-stage average admitted too fast and oversubscribed)."""
+    sc = tiny_scenario()
+    trace = simulate_requests(
+        sc, load=ServingLoad(rate=50.0, n_requests=200, seed=3), events=())
+    assert all(trace.utilization(d) <= 1.0 + 1e-6
+               for d in trace.per_device_busy)
+    assert trace.oversubscribed_devices == []
+
+
+# -- regression: utilization clamp hid oversubscription ---------------------------
+def test_utilization_reports_raw_ratio_and_oversubscription():
+    """Pre-fix, busy/horizon was silently clamped to 1.0, hiding
+    oversubscription from the multi-tenant path."""
+    from repro.sim.serving import RequestRecord
+    trace = ServingTrace(scenario="x", strategy="dora",
+                         load=ServingLoad(rate=1.0, n_requests=1),
+                         slo_s=1.0,
+                         requests=[RequestRecord(0.0, 0.0, 0.5)],
+                         actions=[],
+                         per_device_energy={0: 1.0, 1: 1.0},
+                         per_device_busy={0: 15.0, 1: 5.0}, horizon_s=10.0)
+    assert trace.utilization(0) == pytest.approx(1.5)    # raw, not 1.0
+    assert trace.utilization(1) == pytest.approx(0.5)
+    assert trace.oversubscribed(0)
+    assert not trace.oversubscribed(1)
+    assert trace.oversubscribed_devices == [0]
+    assert trace.to_dict()["oversubscribed_devices"] == [0]
