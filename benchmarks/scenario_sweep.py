@@ -1,4 +1,5 @@
-"""Scenario sweep — every registered deployment planned via the facade.
+"""Scenario sweep — every registered deployment planned via the facade,
+plus a seeded sweep over the generated scenario families.
 
 Breadth check behind the paper's headline claim: Dora produces a
 QoE-feasible hybrid-parallel plan for *every* deployment in the
@@ -6,16 +7,22 @@ QoE-feasible hybrid-parallel plan for *every* deployment in the
 runtime adapter absorbs each scenario's dynamics timeline, and —
 through the planner-strategy registry — Dora holds the paper's
 comparative edge (1.1–6.3x faster or 21–82% less energy) against at
-least one baseline strategy on at least one catalog scenario.
+least one baseline strategy on at least one catalog scenario.  The
+generated sweep then re-checks the first two claims on a *sampled*
+slice of the deployment space (``repro.scenarios.generate``): every
+sampled scenario plans, and nearly all meet their sampled QoE anchor.
 """
 from __future__ import annotations
 
-from .common import ALL_SCENARIOS, Claim, table
+from .common import ALL_SCENARIOS, QUICK, Claim, table
 
 from repro import dora
 from repro.scenarios import get_scenario
+from repro.scenarios.generate import generate, list_families
 
 COMPARE_STRATEGIES = ("dora", "throughput_max", "chain_split")
+#: seeds swept per generator family (deterministic — same rows each run)
+GEN_SEEDS = range(3) if QUICK else range(10)
 
 
 def run(report) -> None:
@@ -76,3 +83,43 @@ def run(report) -> None:
              f"best: {best[0]} {best[1]:.2f}x/{best[2]:+.0%}"
              if best else "no comparable scenario")
     report.add_claims([c1, c2, c3, c4])
+
+    # -- generated families: the sampled slice of the deployment space --------
+    gen_rows, gen_planned, gen_qoe, gen_total = [], 0, 0, 0
+    for family in list_families():
+        for seed in GEN_SEEDS:
+            gen_total += 1
+            sc = generate(family, seed)
+            try:
+                rep = dora.plan(sc)
+            except Exception as e:  # noqa: BLE001 — a failure is the finding
+                gen_rows.append([sc.name, sc.mode, sc.model_name, "ERROR",
+                                 type(e).__name__, "-"])
+                continue
+            gen_planned += 1
+            gen_qoe += rep.meets_qoe
+            gen_rows.append([sc.name, sc.mode, sc.model_name,
+                             f"{rep.latency * 1e3:.1f}",
+                             f"{rep.energy:.1f}",
+                             "MET" if rep.meets_qoe else "MISS"])
+    report.add_table(table(
+        ["scenario", "mode", "model", "lat (ms)", "energy (J)", "QoE"],
+        gen_rows,
+        f"Generated-family sweep — {len(list(GEN_SEEDS))} seeds x "
+        f"{len(list_families())} families (repro.scenarios.generate)"))
+    g1 = Claim(f"Generated sweep: all {gen_total} sampled scenarios plan "
+               "without error")
+    g1.check(gen_planned == gen_total, f"{gen_planned}/{gen_total}")
+    g2 = Claim("Generated sweep: >=90% of sampled scenarios meet their "
+               "sampled QoE anchor")
+    g2.check(gen_qoe >= 0.9 * gen_planned, f"{gen_qoe}/{gen_planned}")
+    report.add_claims([g1, g2])
+
+
+if __name__ == "__main__":
+    import sys
+
+    from .run import Report
+    r = Report()
+    run(r)
+    sys.exit(0 if all(c.ok for c in r.claims) else 1)

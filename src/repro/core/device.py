@@ -128,6 +128,81 @@ class Topology:
               p2p: Optional[Dict[Tuple[int, int], List[str]]] = None) -> "Topology":
         return cls(devices, resources, p2p)
 
+    @classmethod
+    def from_edges(cls, devices: Sequence[DeviceProfile],
+                   edges: Sequence[Tuple[int, int]], link_mbps: float,
+                   name: str = "link", latency: float = 0.5e-3) -> "Topology":
+        """Dedicated p2p links along an explicit edge list; every other
+        pair routes over a fewest-hops path (multi-hop transfers occupy
+        every intermediate link).  The generic constructor behind
+        :meth:`star`, :meth:`line` and :meth:`mesh`.  Raises
+        ``ValueError`` when the edge list leaves the fleet disconnected
+        or references unknown devices.
+        """
+        n = len(devices)
+        resources: List[LinkResource] = []
+        adj: Dict[int, Dict[int, str]] = {}
+        seen: set = set()
+        for a, b in edges:
+            if not (0 <= a < n and 0 <= b < n) or a == b:
+                raise ValueError(f"bad edge ({a}, {b}) for a {n}-device fleet")
+            lo, hi = min(a, b), max(a, b)
+            if (lo, hi) in seen:
+                continue
+            seen.add((lo, hi))
+            lname = f"{name}-{lo}-{hi}"
+            resources.append(LinkResource(
+                name=lname, capacity=link_mbps * MBPS,
+                members=frozenset((lo, hi)), shared=False, latency=latency))
+            adj.setdefault(lo, {})[hi] = lname
+            adj.setdefault(hi, {})[lo] = lname
+        p2p: Dict[Tuple[int, int], List[str]] = {}
+        for i in range(n):
+            for j in range(n):
+                if i == j:
+                    continue
+                route = _shortest_route(adj, i, j)
+                if route is None:
+                    raise ValueError(
+                        f"edge list leaves devices {i} and {j} disconnected")
+                p2p[(i, j)] = route
+        return cls(devices, resources, p2p)
+
+    @classmethod
+    def star(cls, devices: Sequence[DeviceProfile], link_mbps: float,
+             name: str = "star", latency: float = 0.5e-3,
+             hub: int = 0) -> "Topology":
+        """Hub-and-spoke: dedicated hub↔leaf links; leaf↔leaf transfers
+        traverse both legs through the hub.  The hub defaults to device
+        0 (the partitioner's DP grows plans over device prefixes, so the
+        best-connected device should lead)."""
+        edges = [(hub, i) for i in range(len(devices)) if i != hub]
+        return cls.from_edges(devices, edges, link_mbps, name=name,
+                              latency=latency)
+
+    @classmethod
+    def line(cls, devices: Sequence[DeviceProfile], link_mbps: float,
+             name: str = "hop", latency: float = 0.5e-3) -> "Topology":
+        """Multi-hop chain 0–1–…–(n-1): each transfer traverses every
+        intermediate link (vehicle convoys, daisy-chained gateways)."""
+        edges = [(i, i + 1) for i in range(len(devices) - 1)]
+        return cls.from_edges(devices, edges, link_mbps, name=name,
+                              latency=latency)
+
+    @classmethod
+    def mesh(cls, devices: Sequence[DeviceProfile], link_mbps: float,
+             name: str = "mesh", latency: float = 0.5e-3,
+             edges: Optional[Sequence[Tuple[int, int]]] = None) -> "Topology":
+        """Dedicated pairwise links — a full mesh by default, or a
+        partial mesh over an explicit ``edges`` list (missing pairs
+        route multi-hop; a disconnected edge list raises
+        ``ValueError``)."""
+        if edges is None:
+            n = len(devices)
+            edges = [(i, j) for i in range(n) for j in range(i + 1, n)]
+        return cls.from_edges(devices, edges, link_mbps, name=name,
+                              latency=latency)
+
     # -- queries ---------------------------------------------------------------
     def resources_between(self, i: int, j: int) -> List[LinkResource]:
         if i == j:

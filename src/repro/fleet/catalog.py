@@ -127,3 +127,13 @@ register_fleet(FleetScenario(
          DynamicsEvent(t=120.0, bandwidth_scale={"wifi": 1.0})),
     ),
 ))
+
+
+# -- generated mixed fleet --------------------------------------------------------
+# One representative of the generator's ``mixed_train_serve`` fleet
+# family (repro.scenarios.generate.generate_fleet): a fine-tuning
+# tenant co-deployed with an always-on serving tenant on a generated
+# shared-medium fleet.  Seed 0 is verified feasible under co-planning.
+from ..scenarios.generate import generate_fleet
+
+register_fleet(generate_fleet(0, name="mixed_train_serve"))

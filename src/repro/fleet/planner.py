@@ -293,9 +293,12 @@ class FleetPlanner:
                _conditions_key(conditions))
         if key in self._proxy_cache:
             return self._proxy_cache[key] or self._FAILED
-        sub, mapping = self.tenant_topology(allotment, shares)
         score: Optional[_Score] = None
         try:
+            # subset() raises when the allotment disconnects a routed
+            # topology (star leaves without their hub, mesh fragments);
+            # such allotments are infeasible, not fatal
+            sub, mapping = self.tenant_topology(allotment, shares)
             result = get_strategy(self.config.proxy_strategy).plan(
                 self.graphs[tenant.name], sub, tenant.qoe, tenant.workload)
             plan = result.best
@@ -325,10 +328,11 @@ class FleetPlanner:
         cache = self._plan_cache if warm is None else memo
         if cache is not None and key in cache:
             return cache[key]
-        sub, mapping = self.tenant_topology(allotment, shares)
         strat_name = self.strategy_for(tenant.name)
         report: Optional[PlanReport] = None
         try:
+            # subset() raises on disconnecting allotments — infeasible
+            sub, mapping = self.tenant_topology(allotment, shares)
             if strat_name == "dora":
                 planner = DoraPlanner(
                     self.graphs[tenant.name], sub, tenant.qoe,

@@ -78,6 +78,18 @@ class Scenario:
         return getattr(self.model, "__name__", "custom")
 
     def build_topology(self) -> Topology:
+        """A **fresh** ``Topology`` on every call — never memoized.
+
+        ``Topology`` carries mutable post-construction state (route /
+        bandwidth memo caches, calibrated link rates), and consumers
+        mutate their copy freely: ``FleetPlanner`` calibrates it,
+        adapter sessions scale link capacities as dynamics land.
+        Memoizing here would alias that state across sessions — two
+        concurrent ``dora.serve`` sessions would see each other's
+        bandwidth dips.  Topology factories must therefore rebuild from
+        scratch (all catalog + generated factories do); the contract is
+        locked by ``test_build_topology_returns_fresh_copies``.
+        """
         return self.topology()
 
     def build_graph(self, seq_len: Optional[int] = None) -> ModelGraph:
@@ -139,10 +151,14 @@ def iter_scenarios(tag: Optional[str] = None) -> Iterable[Scenario]:
         yield _REGISTRY[name]
 
 
-# Populate the registry with the built-in catalogue on import.
+# Populate the registry with the built-in catalogue on import.  The
+# catalogue pulls in ``generate`` (the seeded scenario generator) for
+# its generated-family representatives, so ``repro.scenarios.generate``
+# is always importable once the package is.
 from . import catalog  # noqa: E402,F401  (registration side effects)
+from . import generate  # noqa: E402,F401  (generator families)
 
 __all__ = [
     "Scenario", "ModelRef", "PAPER_SETTINGS", "register", "get_scenario",
-    "list_scenarios", "iter_scenarios", "catalog",
+    "list_scenarios", "iter_scenarios", "catalog", "generate",
 ]

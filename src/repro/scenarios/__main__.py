@@ -31,6 +31,17 @@ fleet registry (``repro.fleet``)::
 ``--run NAME --fleet`` co-plans the fleet (``dora.plan_fleet``) and
 prints every tenant's allotment + QoE verdict; ``--requests`` then runs
 the multi-tenant serving simulator on the fleet timeline.
+
+``--generate`` samples from the seeded generator families
+(``repro.scenarios.generate``) instead of the registry::
+
+    PYTHONPATH=src python -m repro.scenarios --generate lossy_mesh \
+        --seed 0 --count 5
+    PYTHONPATH=src python -m repro.scenarios --generate all --count 3
+
+Each sampled deployment prints its canonical (golden-locked) parameter
+summary and is planned end to end; ``--list`` also reports per-family
+counts of registered generated representatives.
 """
 from __future__ import annotations
 
@@ -54,6 +65,23 @@ def _print_listing(tag: str = None) -> None:
     for r in rows:
         print("  ".join(v.ljust(w) for v, w in zip(r, widths)))
     print(f"\n{len(rows)} scenarios registered")
+    _print_generator_coverage()
+
+
+def _print_generator_coverage() -> None:
+    """One coverage line per generator family: how many registered
+    catalog representatives each has (the families themselves are
+    unbounded — any seed is a valid deployment)."""
+    from ..fleet import iter_fleets
+    from .generate import FAMILIES
+    counts = {fam: sum(1 for s in iter_scenarios("generated")
+                       if fam in s.tags)
+              for fam in sorted(FAMILIES)}
+    fleet_count = sum(1 for f in iter_fleets("generated"))
+    parts = [f"{fam}:{n}" for fam, n in counts.items()]
+    parts.append(f"mixed_train_serve:{fleet_count} (fleet)")
+    print(f"generator families ({len(FAMILIES) + 1}, seeded — see "
+          f"--generate): registered representatives " + " ".join(parts))
 
 
 def _print_fleet_listing(tag: str = None) -> None:
@@ -102,6 +130,47 @@ def _run_fleets(names: List[str], requests: bool,
     if json_path is not None:
         with open(json_path, "w", encoding="utf-8") as f:
             json.dump({"fleets": artifact}, f, indent=2, allow_nan=False)
+            f.write("\n")
+        print(f"\nwrote {json_path}")
+    return failures
+
+
+def _run_generated(family: str, seed: int, count: int, strategy: str,
+                   json_path: Optional[str]) -> int:
+    """Sample ``count`` scenarios per family starting at ``seed``,
+    print each draw's canonical summary, and plan it."""
+    from .generate import generate, list_families, sample_params
+    fams = list_families() if family == "all" else [family]
+    failures = 0
+    artifact: Dict[str, Dict[str, object]] = {}
+    for fam in fams:
+        for s in range(seed, seed + count):
+            try:
+                params = sample_params(fam, s)
+            except KeyError as e:
+                print(f"error: {e.args[0]}", file=sys.stderr)
+                return 1
+            print(params.summary())
+            entry: Dict[str, object] = {"summary": params.summary()}
+            artifact[params.name] = entry
+            try:
+                report = dora.plan(generate(fam, s), strategy=strategy)
+            except Exception as e:  # noqa: BLE001 — keep sweeping
+                print(f"  [ERROR] planning failed: "
+                      f"{type(e).__name__}: {e}")
+                entry["error"] = f"{type(e).__name__}: {e}"
+                failures += 1
+                continue
+            verdict = "QoE ok" if report.meets_qoe else "QoE MISS"
+            print(f"  -> {len(report.best.stages)} stages, "
+                  f"{report.latency * 1e3:.2f} ms, "
+                  f"{report.energy:.2f} J, {verdict}")
+            entry["plan"] = report.to_dict()
+            if not report.meets_qoe:
+                failures += 1
+    if json_path is not None:
+        with open(json_path, "w", encoding="utf-8") as f:
+            json.dump({"generated": artifact}, f, indent=2, allow_nan=False)
             f.write("\n")
         print(f"\nwrote {json_path}")
     return failures
@@ -212,6 +281,14 @@ def main(argv=None) -> int:
                          "--list prints it, --run co-plans fleets "
                          "(dora.plan_fleet) and --requests runs the "
                          "multi-tenant serving simulator")
+    ap.add_argument("--generate", default=None, metavar="FAMILY",
+                    help="sample scenarios from a generator family "
+                         "(repro.scenarios.generate) and plan each; "
+                         "'all' sweeps every family")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="with --generate: first seed (default 0)")
+    ap.add_argument("--count", type=int, default=1,
+                    help="with --generate: seeds per family (default 1)")
     args = ap.parse_args(argv)
 
     if args.strategies:
@@ -219,6 +296,9 @@ def main(argv=None) -> int:
             print(name)
         print(f"\n{len(list_strategies())} strategies registered")
         return 0
+    if args.generate:
+        return _run_generated(args.generate, args.seed, args.count,
+                              args.strategy, args.json_path)
     if args.fleet:
         from ..fleet import list_fleets
         if args.list or not args.run:

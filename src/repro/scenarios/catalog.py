@@ -228,3 +228,27 @@ register(Scenario(
     tags=("train", "pod"),
     request_rate=0.4,
 ))
+
+
+# -- generated-family representatives ------------------------------------------
+# ``repro.scenarios.generate`` samples whole *families* of deployments;
+# the catalog pins one named representative per new family so the
+# list/plan/simulate surfaces (and the strategy matrix tests) always
+# exercise them.  The seeds are verified: Dora meets the sampled QoE,
+# the dynamics timeline ends QoE-ok, and every registered strategy
+# produces a valid plan.  Reproduce either one with
+# ``generate("vehicle_platoon", 2)`` / ``generate("lossy_mesh", 24)``.
+from .generate import register_generated  # noqa: E402  (cycle-safe)
+
+register_generated(
+    "vehicle_platoon", seed=2, name="platoon_convoy",
+    description="Generated convoy: four vehicles on a lossy V2V ring "
+                "whose link quality is redrawn by mobility events; "
+                "per-token serving under churn (vehicle_platoon family, "
+                "seed 2).")
+
+register_generated(
+    "lossy_mesh", seed=24, name="lossy_mesh",
+    description="Generated degraded mesh: four boards on a partial 5G "
+                "mesh with a thermal throttle and repeated bandwidth "
+                "dips (lossy_mesh family, seed 24).")

@@ -1,5 +1,5 @@
 """Property-testing compat layer: real ``hypothesis`` when installed,
-otherwise a tiny deterministic stand-in.
+otherwise a deterministic multi-example stand-in.
 
 The container image this repo targets does not ship ``hypothesis``, and
 an unconditional ``import hypothesis`` breaks *collection* of five test
@@ -9,15 +9,40 @@ import ``given``/``settings``/``st`` from here:
     from helpers._hypothesis_compat import given, settings, st
 
 When hypothesis is available it is re-exported unchanged (full
-shrinking, example database, etc.).  When it is missing, the stand-in
-runs each property test over ``max_examples`` pseudo-random examples
-from a fixed seed — deterministic across runs, no shrinking, but the
-invariants still get exercised instead of the module erroring out.
+shrinking, example database, etc. — CI installs it via the ``test``
+extras).  When it is missing, the stand-in runs each property test over
+``max_examples`` pseudo-random examples drawn from a per-test seed —
+deterministic across runs and immune to ``PYTHONHASHSEED`` (the seed is
+derived with sha256, not ``hash``), no shrinking, but the invariants
+still get exercised instead of the module erroring out.  A falsified
+property reports the example index, the drawn values and the stream
+seed so the case reproduces exactly.
 
-Only the strategy surface this repo uses is implemented: ``integers``,
-``floats``, ``booleans``, ``sampled_from``, ``tuples``, ``lists``.
+Strategy surface implemented by the stand-in: ``integers``, ``floats``,
+``booleans``, ``sampled_from``, ``just``, ``one_of``, ``tuples``,
+``lists``, ``dictionaries``, ``composite``, plus ``.map``/``.filter``
+on every strategy.
+
+Example budgets honor the ``STRESS_EXAMPLES`` env knob through
+:func:`max_examples` (works with both engines): the CI default keeps
+property runs fast; ``STRESS_EXAMPLES=500`` is the nightly-style deep
+sweep.
 """
 from __future__ import annotations
+
+import hashlib
+import os
+
+
+def max_examples(default: int) -> int:
+    """Per-test example budget: ``STRESS_EXAMPLES`` env override or the
+    test's fast default.  Use inside ``settings``:
+
+        @settings(max_examples=max_examples(50), deadline=None)
+    """
+    env = os.environ.get("STRESS_EXAMPLES", "").strip()
+    return int(env) if env else default
+
 
 try:  # pragma: no cover - exercised only when hypothesis is installed
     import hypothesis.strategies as st
@@ -28,8 +53,16 @@ except ImportError:
     import random
 
     HAVE_HYPOTHESIS = False
-    _SEED = 0xD0AA            # fixed: failures must reproduce run-to-run
+    _SEED = 0xD0AA            # base seed: failures must reproduce run-to-run
     _DEFAULT_MAX_EXAMPLES = 25
+    _FILTER_ATTEMPTS = 1000
+
+    def _stream_seed(fn) -> int:
+        """Per-test seed so two property tests never replay the same
+        stream (sha256 of the qualified name — hash() is randomized)."""
+        qual = f"{fn.__module__}.{getattr(fn, '__qualname__', fn.__name__)}"
+        digest = hashlib.sha256(qual.encode("utf-8")).digest()
+        return _SEED ^ int.from_bytes(digest[:8], "big")
 
     class _Strategy:
         def __init__(self, draw):
@@ -37,6 +70,20 @@ except ImportError:
 
         def example(self, rng):
             return self._draw(rng)
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self._draw(rng)))
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(_FILTER_ATTEMPTS):
+                    value = self._draw(rng)
+                    if pred(value):
+                        return value
+                raise ValueError(
+                    f"filter rejected {_FILTER_ATTEMPTS} consecutive "
+                    f"examples — loosen the predicate")
+            return _Strategy(draw)
 
     class _StrategyNamespace:
         """Mirror of ``hypothesis.strategies`` for the subset we use."""
@@ -59,6 +106,16 @@ except ImportError:
             return _Strategy(lambda rng: rng.choice(elements))
 
         @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def one_of(*strategies):
+            strategies = list(strategies)
+            return _Strategy(
+                lambda rng: rng.choice(strategies).example(rng))
+
+        @staticmethod
         def tuples(*strategies):
             return _Strategy(
                 lambda rng: tuple(s.example(rng) for s in strategies))
@@ -70,6 +127,29 @@ except ImportError:
                 return [elements.example(rng) for _ in range(n)]
             return _Strategy(draw)
 
+        @staticmethod
+        def dictionaries(keys, values, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                out = {}
+                for _ in range(_FILTER_ATTEMPTS):
+                    if len(out) >= n:
+                        break
+                    out[keys.example(rng)] = values.example(rng)
+                return out
+            return _Strategy(draw)
+
+        @staticmethod
+        def composite(fn):
+            """``@st.composite`` — the wrapped function receives a
+            ``draw`` callable as its first argument, like hypothesis."""
+            def make(*args, **kwargs):
+                def draw_example(rng):
+                    return fn(lambda s: s.example(rng), *args, **kwargs)
+                return _Strategy(draw_example)
+            make.__name__ = fn.__name__
+            return make
+
     st = _StrategyNamespace()
 
     def settings(*, max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
@@ -79,23 +159,30 @@ except ImportError:
             return fn
         return decorate
 
-    def given(*strategies):
+    def given(*strategies, **kw_strategies):
         def decorate(fn):
             # No functools.wraps: it would set __wrapped__ and pytest
             # would then see the original signature and treat the
             # strategy-supplied parameters as fixture requests.
             def wrapper():
-                n = getattr(fn, "_compat_max_examples",
-                            _DEFAULT_MAX_EXAMPLES)
-                rng = random.Random(_SEED)
+                n = getattr(fn, "_compat_max_examples", None)
+                if n is None:
+                    n = max_examples(_DEFAULT_MAX_EXAMPLES)
+                seed = _stream_seed(fn)
+                rng = random.Random(seed)
                 for i in range(n):
-                    example = tuple(s.example(rng) for s in strategies)
+                    args = tuple(s.example(rng) for s in strategies)
+                    kwargs = {k: s.example(rng)
+                              for k, s in sorted(kw_strategies.items())}
                     try:
-                        fn(*example)
+                        fn(*args, **kwargs)
                     except Exception as e:
+                        shown = ", ".join(
+                            [repr(a) for a in args]
+                            + [f"{k}={v!r}" for k, v in kwargs.items()])
                         raise AssertionError(
-                            f"property falsified on example {i}: "
-                            f"{example!r}") from e
+                            f"property falsified on example {i}/{n} "
+                            f"(stream seed {seed:#x}): {shown}") from e
             wrapper.__name__ = fn.__name__
             wrapper.__doc__ = fn.__doc__
             wrapper.__module__ = fn.__module__
@@ -103,4 +190,4 @@ except ImportError:
         return decorate
 
 
-__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st", "max_examples"]

@@ -94,6 +94,65 @@ def test_subset_of_subset_round_trips_device_ids():
     assert set(direct.resources) == set(sub2.resources)
 
 
+def test_subset_single_device_fleet():
+    """A one-device allotment is legal on every fabric the generator
+    emits: no links survive (or only the shared medium's remnant), and
+    the device keeps its identity."""
+    devs = [CATALOG["genio520"]] * 4
+    for topo in (Topology.shared_medium(devs, 300.0),
+                 Topology.star(devs, 300.0),
+                 Topology.ring(devs, 300.0),
+                 Topology.mesh(devs, 300.0)):
+        for keep in range(topo.n):
+            sub, mapping = topo.subset([keep])
+            assert sub.n == 1
+            assert mapping == {keep: 0}
+            assert sub.devices[0].name == topo.devices[keep].name
+            assert sub.resources_between(0, 0) == []
+
+
+def test_subset_leave_then_join_same_device_twice():
+    """Churning the same device out and back twice round-trips exactly:
+    the rejoined fleet has the original's devices, resources and
+    routes (the adapter replays join as a fresh subset of the full
+    fleet)."""
+    topo = Topology.ring([CATALOG["genio520"]] * 5, 200.0, name="ring")
+    full = list(range(topo.n))
+    for _ in range(2):                         # leave #3, rejoin, repeat
+        sub, _ = topo.subset([i for i in full if i != 3])
+        assert sub.n == topo.n - 1
+        back, mapping = topo.subset(full)
+        assert back.n == topo.n
+        assert mapping == {i: i for i in full}
+        assert set(back.resources) == set(topo.resources)
+        assert [d.name for d in back.devices] \
+            == [d.name for d in topo.devices]
+        for i, j in ((0, 3), (3, 4), (1, 2)):
+            assert back.peak_bandwidth(i, j) \
+                == pytest.approx(topo.peak_bandwidth(i, j))
+
+
+def test_subset_mesh_disconnection_raises():
+    """Subsetting a partial mesh across a cut vertex raises the
+    documented disconnection ValueError instead of silently planning
+    over a fragment (only ring rerouting was covered before)."""
+    devs = [CATALOG["genio520"]] * 5
+    # 0-1-2 and 3-4 joined only through 2: dropping 2 cuts the mesh
+    topo = Topology.mesh(devs, 150.0,
+                         edges=[(0, 1), (1, 2), (2, 3), (3, 4)])
+    with pytest.raises(ValueError, match="disconnect"):
+        topo.subset([0, 1, 3, 4])
+    # either side of the cut on its own is fine
+    left, _ = topo.subset([0, 1, 2])
+    right, _ = topo.subset([3, 4])
+    assert left.n == 3 and right.n == 2
+    assert left.resources_between(0, 2)
+    # line interiors cut the same way
+    line = Topology.line(devs, 150.0)
+    with pytest.raises(ValueError, match="disconnect"):
+        line.subset([0, 1, 4])
+
+
 def test_scale_resources_prices_shared_links():
     topo = _home2()
     half = topo.scale_resources({"wifi": 0.5})
