@@ -1,0 +1,103 @@
+"""Sim-to-real fidelity: planner predictions vs executed pipelines.
+
+Validates the committed ``BENCH_fidelity.json`` trajectory produced by
+``python -m repro.calibrate``: for each catalog-scenario twin the
+calibration loop plans a host-fleet pipeline, prices the chosen layout
+under analytic (datasheet) and measured (``ProfiledCosts``) rates, then
+executes it for real through ``repro.runtime.pipeline`` and reports
+both relative errors.
+
+The harness itself only *reads* the artifact — the measurement run
+must own the process (forced host devices have to be configured before
+jax initializes, which ``python -m repro.calibrate`` does).  Re-measure
+with::
+
+    PYTHONPATH=src python -m benchmarks.fig_fidelity --run
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import List, Optional
+
+from .common import Claim, table
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_fidelity.json")
+
+
+def _load() -> dict:
+    with open(ARTIFACT, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def run(report) -> None:
+    doc = _load()
+    cur = doc["current"]
+    rows = []
+    for name, rec in cur["cases"].items():
+        rows.append((name, rec["mode"], rec["n_stages"],
+                     f"{rec['measured_s'] * 1e3:.1f}",
+                     f"{rec['calibrated']['predicted_s'] * 1e3:.1f}",
+                     f"{rec['calibrated']['rel_err']:.1%}",
+                     f"{rec['uncalibrated']['predicted_s'] * 1e3:.1f}",
+                     f"{rec['uncalibrated']['rel_err']:.1%}"))
+    report.add_table(table(
+        ("scenario", "mode", "S", "measured ms", "cal ms", "cal err",
+         "uncal ms", "uncal err"),
+        rows, title=f"plan-vs-execution fidelity ({cur['backend']})"))
+
+    cal = cur["mean_rel_err_calibrated"]
+    unc = cur["mean_rel_err_uncalibrated"]
+    c1 = Claim("Fidelity: measurement calibration reduces plan-vs-reality "
+               "error (calibrated mean rel err < uncalibrated)")
+    c1.check(cal < unc, f"calibrated {cal:.1%} vs uncalibrated {unc:.1%} "
+                        f"({cur['calibration_gain']:.1f}x)")
+    c2 = Claim("Fidelity: calibrated predictions land within 25% of "
+               "executed iteration wall-clock on average")
+    c2.check(cal <= 0.25, f"mean rel err {cal:.1%}")
+    modes = {r["mode"] for r in cur["cases"].values()}
+    c3 = Claim("Fidelity: ≥3 catalog scenarios executed, covering both "
+               "serve and train")
+    c3.check(len(cur["cases"]) >= 3 and modes == {"serve", "train"},
+             f"{len(cur['cases'])} scenarios, modes={sorted(modes)}")
+    report.add_claims([c1, c2, c3])
+    report.stash("fidelity", cur)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="plan-vs-execution fidelity (reads BENCH_fidelity.json)")
+    ap.add_argument("--run", action="store_true",
+                    help="re-measure first via `python -m repro.calibrate` "
+                         "(honors BENCH_QUICK)")
+    args = ap.parse_args(argv)
+    if args.run:
+        proc = subprocess.run([sys.executable, "-m", "repro.calibrate"],
+                              cwd=os.path.join(os.path.dirname(ARTIFACT)),
+                              env=dict(os.environ, PYTHONPATH="src"))
+        if proc.returncode:
+            return proc.returncode
+
+    class _Report:
+        def add_table(self, text):
+            print(text)
+
+        def add_claims(self, claims):
+            self.claims = claims
+            for c in claims:
+                print(c.line())
+
+        def stash(self, *_):
+            pass
+
+    rep = _Report()
+    run(rep)
+    return 0 if all(c.ok for c in rep.claims) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

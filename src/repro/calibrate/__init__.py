@@ -1,0 +1,51 @@
+"""repro.calibrate — sim-to-real calibration & fidelity.
+
+Microbenchmarks the real compute path (kernels, jitted steps, the
+pipeline stage block) on the local host, converts the measurements into
+a committed :class:`~repro.core.profiler.ProfiledCosts` artifact, and
+closes the loop by executing planned pipelines for real and comparing
+measured wall-clock against the planner's predictions
+(``BENCH_fidelity.json``).
+
+Importing this package never initializes jax: :mod:`timing` is eager
+(it is jax-free at import), while :mod:`microbench`, :mod:`host` and
+:mod:`fidelity` load on first attribute access.  Run the whole loop
+with ``python -m repro.calibrate``.
+"""
+from __future__ import annotations
+
+from .timing import (DEFAULT_CACHE, MeasurementCache, backend_key, block,
+                     ensure_host_devices, time_callable)
+
+_LAZY = {
+    "measure_host": "microbench",
+    "matmul_peak_flops": "microbench",
+    "memory_bandwidth": "microbench",
+    "kernel_rates": "microbench",
+    "step_seconds": "microbench",
+    "transfer_goodput": "microbench",
+    "contended_mlp_rate": "microbench",
+    "host_device": "host",
+    "host_topology": "host",
+    "host_costs": "host",
+    "calibrate_host": "host",
+    "FidelityCase": "fidelity",
+    "CASES": "fidelity",
+    "QUICK_CASES": "fidelity",
+    "run_case": "fidelity",
+    "run_fidelity": "fidelity",
+    "write_bench": "fidelity",
+    "check_regression": "fidelity",
+    "BENCH_PATH": "fidelity",
+}
+
+__all__ = ["DEFAULT_CACHE", "MeasurementCache", "backend_key", "block",
+           "ensure_host_devices", "time_callable", *sorted(_LAZY)]
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.calibrate' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f".{mod}", __name__), name)

@@ -1,0 +1,81 @@
+"""``python -m repro.calibrate`` — measure, calibrate, check fidelity.
+
+Default run: microbenchmark the host, write the ProfiledCosts artifact,
+run the fidelity suite (plan → price both ways → execute → compare) and
+rewrite ``BENCH_fidelity.json``.  ``--check`` is the CI gate: re-run the
+quick subset with the cache off and fail on calibrated-error regression.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.calibrate",
+        description="host calibration + plan-vs-reality fidelity bench")
+    ap.add_argument("--quick", action="store_true",
+                    help="small fidelity cases only (also via BENCH_QUICK=1)")
+    ap.add_argument("--check", action="store_true",
+                    help="CI regression gate on the quick subset "
+                         "(implies --quick, ignores the measurement cache)")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="forced host device count if jax is uninitialized "
+                         "and XLA_FLAGS doesn't already set one (default 4)")
+    ap.add_argument("--artifact", default=None, metavar="PATH",
+                    help="also write the ProfiledCosts JSON here "
+                         "(e.g. calibration/host_cpu.json)")
+    ap.add_argument("--cache", default=None, metavar="PATH",
+                    help="measurement cache file ('none' disables; default "
+                         "~/.cache/repro-calibrate/measurements.json)")
+    args = ap.parse_args(argv)
+    quick = args.quick or bool(os.environ.get("BENCH_QUICK"))
+
+    # must happen before anything imports jax
+    from .timing import MeasurementCache, ensure_host_devices
+    ensure_host_devices(args.devices)
+
+    if args.cache == "none":
+        cache = MeasurementCache(path=None)
+    elif args.cache:
+        cache = MeasurementCache(path=args.cache)
+    else:
+        cache = MeasurementCache(path=None) if args.check \
+            else MeasurementCache()
+
+    from . import fidelity
+    if args.check:
+        return fidelity.check_regression()
+
+    from .host import calibrate_host
+    costs = calibrate_host(cache, quick=quick, path=args.artifact)
+    print(f"calibrated {costs.name}: "
+          f"compute_factor={next(iter(costs.compute_factor.values())):.4f} "
+          f"({len(costs.compute_factor)} devices)")
+    if args.artifact:
+        print(f"wrote {args.artifact}")
+
+    current = fidelity.run_fidelity(quick=quick, cache=cache)
+    if quick:
+        fidelity.write_quick(current)
+    else:
+        fidelity.write_bench(current)
+    for name, rec in current["cases"].items():
+        print(f"  {name} ({rec['mode']}, S={rec['n_stages']}): "
+              f"measured={rec['measured_s']*1e3:.1f}ms  "
+              f"calibrated={rec['calibrated']['predicted_s']*1e3:.1f}ms "
+              f"(err {rec['calibrated']['rel_err']:.1%})  "
+              f"uncalibrated={rec['uncalibrated']['predicted_s']*1e3:.1f}ms "
+              f"(err {rec['uncalibrated']['rel_err']:.1%})")
+    print(f"mean rel err: calibrated "
+          f"{current['mean_rel_err_calibrated']:.3f} vs uncalibrated "
+          f"{current['mean_rel_err_uncalibrated']:.3f} "
+          f"(gain {current['calibration_gain']:.1f}x)")
+    print(f"wrote {fidelity.BENCH_PATH}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

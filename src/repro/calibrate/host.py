@@ -1,0 +1,158 @@
+"""Host-CPU fleet twin: measured DeviceProfiles, Topology and costs.
+
+The fidelity loop (and ``dora.calibrate``) plans over a *host fleet*: N
+``host<i>`` devices backed by jax's forced-host-platform devices.  Each
+device's "datasheet" claims exactly what a naive single-stream
+microbenchmark would claim — sustained matmul FLOP/s, memcpy bytes/s —
+priced through the library-default ``compute_efficiency`` MFU guess.
+That claim is systematically wrong on a time-shared host: N forced
+devices serialize on the physical cores, so a pipeline stage really
+runs at the *contended* rate, roughly ``1/N`` of single-stream.
+:func:`host_costs` converts that measured gap into a
+:class:`~repro.core.profiler.ProfiledCosts` via ``from_measurements``
+— the same sim-to-real correction a real edge fleet would derive from
+on-device step timings.
+
+Everything imports jax lazily; the module is safe to import from the
+jax-free ``repro.dora`` facade.
+"""
+from __future__ import annotations
+
+import datetime
+from typing import Dict, Mapping, Optional, Tuple
+
+from ..core.device import DeviceProfile, LinkResource, Topology
+from ..core.profiler import ProfiledCosts
+from .microbench import measure_host
+from .timing import MeasurementCache, backend_key
+
+#: Default accelerator-visible memory per host device.  Deliberately
+#: small enough that realistic proxy models need several pipeline
+#: stages; the fidelity loop overrides it per case.
+HOST_MEMORY = 4e9
+
+#: Shared-medium resource name of the host fleet (device_put transfers
+#: between forced host devices all ride the same memory system).
+HOSTMEM = "hostmem"
+
+
+def host_device(measure: Mapping[str, float], index: int = 0, *,
+                memory: float = HOST_MEMORY) -> DeviceProfile:
+    """One ``host<i>`` DeviceProfile from host measurements.
+
+    ``flops`` is the measured single-stream matmul peak — the number a
+    datasheet (or a naive benchmark) would claim — and
+    ``compute_efficiency`` stays the library default, so *uncalibrated*
+    planning over a host fleet mispredicts exactly the way datasheet
+    planning over a real fleet does.  ``ProfiledCosts`` then closes the
+    gap from measurements.
+    """
+    return DeviceProfile(
+        name=f"host{index}",
+        flops=float(measure["matmul_peak_flops"]),
+        memory=memory,
+        mem_bw=float(measure["memory_bw"]),
+        e_flop=1e-11, e_byte=1e-9, p_idle=5.0)
+
+
+def host_topology(measure: Mapping[str, float], n: int, *,
+                  memory: float = HOST_MEMORY) -> Topology:
+    """``n`` host devices on one shared ``hostmem`` medium.
+
+    The medium's claimed capacity is the measured single-stream memory
+    bandwidth (the honest "datasheet" for an in-memory link); its
+    per-message latency is derived from the small-vs-large transfer
+    goodput gap when both were measured.
+    """
+    devs = [host_device(measure, i, memory=memory) for i in range(n)]
+    latency = 1e-4
+    small = measure.get("transfer_small_bps")
+    large = measure.get("transfer_large_bps")
+    if small and large and small > 0.0 and large > 0.0:
+        latency = max((1 << 16) / small - (1 << 16) / large, 1e-5)
+    res = LinkResource(HOSTMEM, capacity=float(measure["memory_bw"]),
+                       members=frozenset(range(n)), shared=True,
+                       latency=latency)
+    return Topology(devs, [res])
+
+
+def host_costs(measure: Mapping[str, float], n: int, *,
+               contended: Optional[float] = None,
+               name: str = "profiled-host",
+               provenance: Optional[Mapping[str, str]] = None
+               ) -> ProfiledCosts:
+    """Measured :class:`ProfiledCosts` for an ``n``-device host fleet.
+
+    Compute factors come from measured-vs-analytic *step seconds* of the
+    contended stage block: the analytic time prices the block at the
+    datasheet effective rate (matmul peak × default MFU), the measured
+    time is what the block actually took per device under ``n``-way
+    concurrent load (``contended`` overrides the cached default
+    measurement, e.g. with a geometry-matched
+    :func:`~repro.calibrate.microbench.contended_mlp_rate`).  The
+    ``hostmem`` bandwidth factor is measured transfer goodput over the
+    claimed memory-bandwidth capacity.
+    """
+    claimed = host_device(measure).effective_flops()
+    achieved = contended
+    if achieved is None:
+        achieved = measure.get("contended_mlp_flops") \
+            or measure.get("contended_flops") \
+            or float(measure["matmul_peak_flops"])
+    # (analytic, measured) seconds per FLOP of the calibration block:
+    # from_measurements turns the pair into achieved/claimed per device.
+    device_seconds = {f"host{i}": (1.0 / claimed, 1.0 / float(achieved))
+                      for i in range(n)}
+    links: Dict[str, Tuple[float, float]] = {}
+    transfer = measure.get("transfer_large_bps")
+    if transfer:
+        links[HOSTMEM] = (float(measure["memory_bw"]), float(transfer))
+    pc = ProfiledCosts.from_measurements(device_seconds=device_seconds,
+                                         link_bytes_per_s=links)
+    prov = {
+        "backend": backend_key(),
+        "date": datetime.date.today().isoformat(),
+        "source": "repro.calibrate host microbenchmarks "
+                  "(matmul peak, memcpy, contended stage block, "
+                  "device_put goodput)",
+        "claimed_effective_flops": f"{claimed:.4g}",
+        "achieved_contended_flops": f"{float(achieved):.4g}",
+        **dict(provenance or {}),
+    }
+    import dataclasses
+    return dataclasses.replace(pc, name=name, provenance=prov)
+
+
+def calibrate_host(cache: Optional[MeasurementCache] = None, *,
+                   quick: bool = False,
+                   archs=("qwen3_32b", "mamba2_780m"),
+                   path: Optional[str] = None) -> ProfiledCosts:
+    """Measure this host and build its ProfiledCosts artifact.
+
+    Runs (or recalls from ``cache``) the microbenchmark suite —
+    including the timed zoo train/decode steps, whose measured-vs-
+    analytic ratios land in the provenance — and returns the
+    :class:`ProfiledCosts` for the current forced-host fleet.  With
+    ``path``, the artifact is also written as committable JSON,
+    loadable later via ``dora.plan(..., costs="profiled:<path>")``.
+    """
+    import jax
+
+    from .microbench import step_analytic_seconds
+
+    cache = cache if cache is not None else MeasurementCache()
+    measure = measure_host(cache, archs=archs, quick=quick)
+    n = jax.device_count()
+    prov: Dict[str, str] = {}
+    dev = host_device(measure)
+    for arch in archs:
+        for mode in ("train", "decode"):
+            measured = measure.get(f"step/{arch}/{mode}_s")
+            if not measured:
+                continue
+            analytic = step_analytic_seconds(arch, mode, dev)
+            prov[f"step_ratio/{arch}/{mode}"] = f"{analytic / measured:.4g}"
+    costs = host_costs(measure, n, provenance=prov)
+    if path is not None:
+        costs.to_json(path)
+    return costs

@@ -1,0 +1,368 @@
+"""Microbenchmarks of the real compute/transfer paths on the live backend.
+
+Four families, all routed through :class:`repro.calibrate.timing`:
+
+* ``matmul_peak``   — sustained large-matmul FLOP/s of one device (the
+  "datasheet" number the uncalibrated host profile claims);
+* ``kernel rates``  — the four ``repro.kernels`` entry points (flash /
+  decode attention, SSD scan, RG-LRU scan) timed against their analytic
+  FLOP counts from ``repro.kernels.flops``;
+* ``step rates``    — jitted train / prefill / decode steps from
+  ``launch/steps.py`` on REDUCED zoo configs, timed whole;
+* ``transfers``     — payload goodput between two local devices
+  (``jax.device_put``), large (streaming capacity) and small
+  (per-message overhead), plus the *contended* per-device compute rate
+  when every local device runs the same block concurrently — on a host
+  whose logical devices time-share physical cores this is the number
+  that actually governs pipeline execution speed.
+
+Everything returns plain floats so the results drop straight into the
+measurement cache and the calibration artifact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+from .timing import MeasurementCache, time_callable
+
+
+# -- single-device compute ------------------------------------------------------
+def matmul_peak_flops(dim: int = 1024, *, repeats: int = 5) -> float:
+    """Achieved FLOP/s of a jitted f32 ``dim×dim`` matmul chain."""
+    import jax
+    import jax.numpy as jnp
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (dim, dim), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (dim, dim), jnp.float32)
+    chain = 4                                   # amortize dispatch
+
+    @jax.jit
+    def run(x, w):
+        for _ in range(chain):
+            x = x @ w
+        return x
+
+    sec = time_callable(lambda: run(x, w), repeats=repeats)
+    return chain * 2.0 * dim ** 3 / sec
+
+
+def memory_bandwidth(nbytes: int = 1 << 26, *, repeats: int = 5) -> float:
+    """Achieved bytes/s of a jitted device-memory copy (read + write)."""
+    import jax
+    import jax.numpy as jnp
+
+    n = nbytes // 4
+    x = jax.numpy.zeros((n,), jnp.float32)
+    run = jax.jit(lambda x: x + 1.0)
+    sec = time_callable(lambda: run(x), repeats=repeats)
+    return 2.0 * nbytes / sec
+
+
+# -- kernel rates ---------------------------------------------------------------
+def kernel_rates(*, repeats: int = 3) -> Dict[str, float]:
+    """Achieved FLOP/s of each ``repro.kernels`` entry point on the live
+    backend (CPU runs the same dispatch path production CPU serving
+    uses).  Shapes are the mid-size cases of ``tests/test_kernels.py``."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels import (decode_attention, flash_attention, rglru_scan,
+                           ssd_scan)
+    from ..kernels import flops as kf
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    out: Dict[str, float] = {}
+
+    B, S, H, KV, d = 1, 256, 4, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, d), jnp.float32)
+    fa = jax.jit(functools.partial(flash_attention, causal=True))
+    sec = time_callable(lambda: fa(q, k, v), repeats=repeats)
+    out["flash_attention"] = kf.flash_attention_flops(B, S, H, KV, d) / sec
+
+    T = 4096
+    qd = jax.random.normal(ks[3], (B, 1, H, d), jnp.float32)
+    kc = jax.random.normal(ks[4], (B, T, KV, d), jnp.float32)
+    vc = jax.random.normal(ks[5], (B, T, KV, d), jnp.float32)
+    clen = jnp.full((B,), T, jnp.int32)
+    da = jax.jit(decode_attention)
+    sec = time_callable(lambda: da(qd, kc, vc, clen), repeats=repeats)
+    out["decode_attention"] = kf.decode_attention_flops(B, T, H, d) / sec
+
+    Bs, Ss, Hs, P, G, N = 1, 256, 4, 64, 1, 64
+    xs = jax.random.normal(ks[6], (Bs, Ss, Hs, P), jnp.float32) * 0.1
+    a = -jnp.abs(jax.random.normal(ks[7], (Bs, Ss, Hs), jnp.float32)) * 0.1
+    b = jax.random.normal(ks[0], (Bs, Ss, G, N), jnp.float32) * 0.1
+    c = jax.random.normal(ks[1], (Bs, Ss, G, N), jnp.float32) * 0.1
+    ss = jax.jit(functools.partial(ssd_scan, chunk=128))
+    sec = time_callable(lambda: ss(xs, a, b, c), repeats=repeats)
+    out["ssd_scan"] = kf.ssd_scan_flops(Bs, Ss, Hs, P, G, N) / sec
+
+    W = 512
+    al = -jnp.abs(jax.random.normal(ks[2], (Bs, Ss, W), jnp.float32)) * 0.3
+    bb = jax.random.normal(ks[3], (Bs, Ss, W), jnp.float32) * 0.1
+    rg = jax.jit(rglru_scan)
+    sec = time_callable(lambda: rg(al, bb), repeats=repeats)
+    out["rglru_scan"] = kf.rglru_scan_flops(Bs, Ss, W) / sec
+    return out
+
+
+# -- whole-step rates -----------------------------------------------------------
+def step_seconds(arch: str, mode: str = "train", *, batch: int = 2,
+                 seq: int = 32, repeats: int = 3) -> float:
+    """Wall seconds of one jitted REDUCED-config step on one device.
+
+    ``mode`` is ``"train"`` (full fwd+bwd+AdamW) or ``"decode"`` (one
+    cached serving token).  This times the *production step functions*
+    from ``launch/steps.py`` — the same closures the dry-run lowers —
+    with real (not ShapeDtypeStruct) inputs.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import reduced_config
+    from ..launch.steps import make_serve_step, make_train_step
+
+    cfg = reduced_config(arch)
+    rng = jax.random.PRNGKey(0)
+    if mode == "train":
+        model, train_step = make_train_step(cfg, remat="none")
+        params = model.init(rng)
+        from ..optim import adamw_init
+        opt = adamw_init(params)
+        toks = jax.random.randint(rng, (batch, seq + 1), 0, cfg.vocab_size)
+        b = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if cfg.encdec:
+            b["encoder_frames"] = jax.random.normal(
+                rng, (batch, cfg.enc_seq, cfg.d_model), jnp.float32) * 0.02
+        if cfg.vision_stub:
+            b["extra_embeddings"] = jax.random.normal(
+                rng, (batch, cfg.n_patches, cfg.d_model), jnp.float32) * 0.02
+        step = jax.jit(train_step)
+        zero = jnp.zeros((), jnp.int32)
+        return time_callable(lambda: step(params, opt, b, zero),
+                             repeats=repeats)
+    if mode != "decode":
+        raise ValueError(f"unknown step mode {mode!r}")
+    model, serve_step = make_serve_step(cfg)
+    params = model.init(rng)
+    cache = model.init_cache(batch, seq)
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    pos = jnp.zeros((batch,), jnp.int32)
+    step = jax.jit(serve_step)
+    return time_callable(lambda: step(params, tok, cache, pos),
+                         repeats=repeats)
+
+
+def step_analytic_seconds(arch: str, mode: str, device, *, batch: int = 2,
+                          seq: int = 32) -> float:
+    """Roofline prediction for the same step on ``device`` (a
+    ``DeviceProfile``): planning-graph FLOPs at the step's geometry over
+    the device's effective rate — the number the planner would use."""
+    from ..configs import reduced_config
+    from ..models.registry import planning_graph
+
+    cfg = reduced_config(arch)
+    g = planning_graph(cfg, seq if mode == "train" else 1)
+    fwd = sum(n.flops_fwd for n in g.nodes) * batch
+    flops = 3.0 * fwd if mode == "train" else fwd
+    return flops / device.effective_flops()
+
+
+# -- multi-device: transfers + contended compute --------------------------------
+def transfer_goodput(nbytes: int, *, repeats: int = 5) -> float:
+    """bytes/s of a ``jax.device_put`` of ``nbytes`` between the first
+    two local devices (needs ≥2 devices; ValueError otherwise)."""
+    import jax
+    import jax.numpy as jnp
+
+    devs = jax.devices()
+    if len(devs) < 2:
+        raise ValueError("transfer benchmark needs >= 2 devices")
+    x = jax.device_put(jnp.zeros((max(nbytes // 4, 1),), jnp.float32),
+                       devs[0])
+    sec = time_callable(lambda: jax.device_put(x, devs[1]), repeats=repeats)
+    return nbytes / sec
+
+
+def contended_rate(n_devices: Optional[int] = None, *, dim: int = 512,
+                   layers: int = 8, repeats: int = 3) -> float:
+    """Per-device FLOP/s when ``n_devices`` devices run an identical
+    MLP-style block stack *concurrently* (pmap).
+
+    On real edge fleets every device computes its pipeline stage at the
+    same time; on the forced-host-platform fleet the logical devices
+    time-share the physical cores, so the concurrent rate — not the
+    single-stream peak — is what a pipeline stage actually gets.  This
+    single measurement is the heart of the sim-to-real compute factor.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    n = n_devices or jax.device_count()
+    n = min(n, jax.device_count())
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    w = jax.random.normal(k1, (n, layers, dim, dim), jnp.float32) * 0.1
+    x = jax.random.normal(k2, (n, 16, dim), jnp.float32)
+
+    @functools.partial(jax.pmap, axis_name="bench",
+                       devices=jax.devices()[:n])
+    def run(w, x):
+        def body(carry, wi):
+            return jnp.tanh(carry @ wi), None
+        out, _ = jax.lax.scan(body, x, w)
+        return out
+
+    sec = time_callable(lambda: run(w, x), repeats=repeats)
+    flops_per_dev = 2.0 * layers * 16 * dim * dim
+    return flops_per_dev / sec
+
+
+def gated_mlp_layer(lp, x):
+    """The fidelity proxy layer: a silu-gated MLP block — 3 matmuls,
+    ``6 · rows · d_model · d_ff`` FLOPs per call.  This is the exact
+    ``layer_fn`` :mod:`repro.calibrate.fidelity` hands the pipeline
+    executor, so timing it under contention calibrates precisely the
+    compute path the executed plan runs."""
+    import jax
+
+    h = jax.nn.silu(x @ lp["wg"]) * (x @ lp["wu"])
+    return h @ lp["wd"]
+
+
+def init_gated_mlp(n_layers: int, d_model: int, d_ff: int, seed: int = 0):
+    """Stacked (L, ...) parameters for :func:`gated_mlp_layer`, scaled
+    so activations neither explode nor vanish across the stack."""
+    import jax
+    import jax.numpy as jnp
+
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    si, so = d_model ** -0.5, 1.8 * d_ff ** -0.5
+    return {
+        "wg": jax.random.normal(k[0], (n_layers, d_model, d_ff),
+                                jnp.float32) * si,
+        "wu": jax.random.normal(k[1], (n_layers, d_model, d_ff),
+                                jnp.float32) * si,
+        "wd": jax.random.normal(k[2], (n_layers, d_ff, d_model),
+                                jnp.float32) * so,
+    }
+
+
+def contended_mlp_rate(n_devices: Optional[int] = None, *, rows: int = 16,
+                       d_model: int = 512, d_ff: int = 2048,
+                       layers: int = 4, iters: int = 12,
+                       training: bool = False,
+                       repeats: int = 3) -> float:
+    """Per-device FLOP/s of the gated-MLP proxy stage under ``n``-way
+    concurrent load (pmap) — :func:`contended_rate` specialized to the
+    fidelity loop's actual stage body (same op mix, same scan-over-
+    layers structure), so the calibrated factor absorbs both the
+    device-concurrency slowdown and the op-mix efficiency gap.
+
+    The stage block repeats ``iters`` times *inside* the jitted call —
+    the executor runs its M+S−1 pipeline ticks inside one jitted scan,
+    so per-call dispatch overhead must be amortized identically or the
+    measured rate underestimates what a pipeline stage actually gets.
+
+    With ``training=True`` the timed block is ``value_and_grad`` of the
+    remat'd stage stack — 4× the forward FLOPs (forward + remat
+    recompute + grad-x + grad-w), exactly the per-stage work mix of a
+    pipelined training step — because backward matmul shapes run at a
+    different rate than forward ones and the planner prices both
+    through one per-device factor.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    n = min(n_devices or jax.device_count(), jax.device_count())
+    lp = init_gated_mlp(layers, d_model, d_ff)
+    lp = jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), lp)
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, rows, d_model),
+                          jnp.float32)
+
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def stack(lp, x):
+        def stage(carry, _):
+            def block(c):
+                def body(c, lpi):
+                    return gated_mlp_layer(lpi, c), None
+                out, _ = jax.lax.scan(body, c, lp)
+                return out
+            out = jax.remat(block)(carry)
+            # the executor's tick ends with an inter-stage ppermute
+            # handoff; include it so its per-tick overhead lands in the
+            # measured rate rather than in the fidelity error
+            if n > 1:
+                out = jax.lax.ppermute(out, "bench", perm)
+            return out, None
+        out, _ = jax.lax.scan(stage, x, None, length=iters)
+        return out
+
+    if training:
+        def target(lp, x):
+            return jnp.mean(stack(lp, x) ** 2)
+        run = jax.pmap(jax.value_and_grad(target), axis_name="bench",
+                       devices=jax.devices()[:n])
+        work = 4.0                       # fwd + remat recompute + 2x grad
+    else:
+        run = jax.pmap(stack, axis_name="bench",
+                       devices=jax.devices()[:n])
+        work = 1.0
+
+    sec = time_callable(lambda: run(lp, x), repeats=repeats)
+    return work * 6.0 * rows * d_model * d_ff * layers * iters / sec
+
+
+# -- cached driver ---------------------------------------------------------------
+def measure_host(cache: Optional[MeasurementCache] = None, *,
+                 archs=("qwen3_32b", "mamba2_780m"),
+                 quick: bool = False) -> Dict[str, float]:
+    """Run (or recall) the host microbenchmark suite → flat dict.
+
+    Keys: ``matmul_peak_flops``, ``memory_bw``, ``kernel/<name>_flops``,
+    ``step/<arch>/<mode>_s``, and — when >1 device is live —
+    ``transfer_large_bps``, ``transfer_small_bps``, ``contended_flops``.
+    """
+    import jax
+
+    cache = cache if cache is not None else MeasurementCache()
+    rep = 2 if quick else 5
+    dim = 512 if quick else 1024
+    out: Dict[str, float] = {}
+    out["matmul_peak_flops"] = cache.get_or_measure(
+        "matmul_peak", f"d{dim}",
+        lambda: matmul_peak_flops(dim, repeats=rep))
+    out["memory_bw"] = cache.get_or_measure(
+        "memory_bw", "64MiB", lambda: memory_bandwidth(repeats=rep))
+    if not quick:
+        names = ("flash_attention", "decode_attention", "ssd_scan",
+                 "rglru_scan")
+        cached = {n: cache.lookup(f"kernel_{n}", "default") for n in names}
+        if any(v is None for v in cached.values()):
+            cached = kernel_rates(repeats=3)
+            for n in names:
+                cache.put(f"kernel_{n}", "default", cached[n])
+        for n in names:
+            out[f"kernel/{n}_flops"] = cached[n]
+    for arch in archs:
+        for mode in ("train", "decode"):
+            out[f"step/{arch}/{mode}_s"] = cache.get_or_measure(
+                f"step_{mode}", f"{arch}/b2s32",
+                lambda a=arch, m=mode: step_seconds(a, m, repeats=rep))
+    if jax.device_count() > 1:
+        out["transfer_large_bps"] = cache.get_or_measure(
+            "transfer", "16MiB",
+            lambda: transfer_goodput(1 << 24, repeats=rep))
+        out["transfer_small_bps"] = cache.get_or_measure(
+            "transfer", "64KiB",
+            lambda: transfer_goodput(1 << 16, repeats=rep))
+        out["contended_flops"] = cache.get_or_measure(
+            "contended", f"n{jax.device_count()}/d512x8",
+            lambda: contended_rate(repeats=rep))
+        out["contended_mlp_flops"] = cache.get_or_measure(
+            "contended_mlp", f"n{jax.device_count()}/r16/d512x2048/l4",
+            lambda: contended_mlp_rate(repeats=rep))
+    return out

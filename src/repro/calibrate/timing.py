@@ -1,0 +1,138 @@
+"""Timing primitives for the calibration microbenchmarks.
+
+Everything here is deliberately boring: warmup the jitted callable so
+compilation never lands in the timed region, ``block_until_ready`` the
+outputs so async dispatch doesn't lie, take best-of-N so scheduler noise
+on a shared host biases upward only, and cache the resulting seconds in
+a JSON file keyed by (bench, shape, backend, jax version) so repeated
+calibration runs are cheap.
+
+This module must stay importable without initializing jax — jax is
+imported lazily inside the functions so ``repro.dora`` (which is
+jax-free by contract) can pull in ``repro.calibrate`` safely.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, Optional
+
+
+def ensure_host_devices(n: int) -> None:
+    """Ask XLA for ``n`` forced host-platform devices — *before* jax
+    initializes, and without clobbering flags the user already set.
+
+    If ``XLA_FLAGS`` already mentions ``--xla_force_host_platform_
+    device_count`` the user's choice wins; otherwise the flag is
+    appended to whatever is there.  No-op after jax has initialized
+    (the device count is locked on first use).
+    """
+    flag = "--xla_force_host_platform_device_count"
+    existing = os.environ.get("XLA_FLAGS", "")
+    if flag in existing:
+        return
+    os.environ["XLA_FLAGS"] = f"{existing} {flag}={n}".strip()
+
+
+def block(tree):
+    """``jax.block_until_ready`` on an arbitrary pytree, returned."""
+    import jax
+    return jax.block_until_ready(tree)
+
+
+def time_callable(fn: Callable[[], object], *, warmup: int = 2,
+                  repeats: int = 5) -> float:
+    """Best-of-``repeats`` wall seconds of ``fn`` (outputs blocked).
+
+    ``fn`` must be self-contained (arguments already closed over and
+    device-resident).  The first ``warmup`` calls absorb compilation and
+    first-touch page faults and are discarded.
+    """
+    for _ in range(max(warmup, 0)):
+        block(fn())
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        block(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def backend_key() -> str:
+    """``<backend>/<n_devices>/jax-<version>`` — the environment part of
+    every cache key (a measurement from another backend or device count
+    must never be reused)."""
+    import jax
+    return f"{jax.default_backend()}/{jax.device_count()}/jax-{jax.__version__}"
+
+
+DEFAULT_CACHE = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro-calibrate", "measurements.json")
+
+
+class MeasurementCache:
+    """JSON-backed memo of microbenchmark measurements.
+
+    Keys are ``"<bench>|<shape>|<backend_key>"`` — bench name, a
+    canonical shape string (the *arch/shape* part), and the environment
+    from :func:`backend_key`.  Values are plain floats (seconds or
+    bytes/s).  The file is rewritten atomically after every new
+    measurement; corrupt/missing files degrade to an empty cache.
+
+    Pass ``path=None`` for a purely in-memory cache (tests, CI runs that
+    must re-measure on their own hardware).
+    """
+
+    def __init__(self, path: Optional[str] = DEFAULT_CACHE):
+        self.path = path
+        self._data: Dict[str, float] = {}
+        self.hits = 0
+        self.misses = 0
+        if path and os.path.exists(path):
+            try:
+                with open(path, encoding="utf-8") as f:
+                    loaded = json.load(f)
+                if isinstance(loaded, dict):
+                    self._data = {str(k): float(v) for k, v in loaded.items()
+                                  if isinstance(v, (int, float))}
+            except (OSError, ValueError):
+                self._data = {}
+
+    @staticmethod
+    def key(bench: str, shape: str, env: Optional[str] = None) -> str:
+        return f"{bench}|{shape}|{env if env is not None else backend_key()}"
+
+    def lookup(self, bench: str, shape: str) -> Optional[float]:
+        """Cached value for (bench, shape, backend), or ``None``."""
+        return self._data.get(self.key(bench, shape))
+
+    def put(self, bench: str, shape: str, value: float) -> float:
+        self._data[self.key(bench, shape)] = float(value)
+        self._flush()
+        return float(value)
+
+    def get_or_measure(self, bench: str, shape: str,
+                       measure: Callable[[], float]) -> float:
+        """Cached value for (bench, shape, backend) or run ``measure``."""
+        val = self.lookup(bench, shape)
+        if val is not None:
+            self.hits += 1
+            return val
+        self.misses += 1
+        return self.put(bench, shape, measure())
+
+    def _flush(self) -> None:
+        if not self.path:
+            return
+        try:
+            os.makedirs(os.path.dirname(self.path), exist_ok=True)
+            tmp = self.path + ".tmp"
+            with open(tmp, "w", encoding="utf-8") as f:
+                json.dump(self._data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError:
+            pass                    # cache is best-effort, never fatal
+
+    def __len__(self) -> int:
+        return len(self._data)

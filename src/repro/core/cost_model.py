@@ -9,7 +9,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Protocol, Sequence, runtime_checkable
+from typing import Dict, List, Optional, Protocol, Sequence, Union, \
+    runtime_checkable
 
 from .device import Topology
 from .planning_graph import ModelGraph
@@ -136,9 +137,26 @@ class AnalyticCosts:
 ANALYTIC_COSTS = AnalyticCosts()
 
 
-def resolve_costs(costs: Optional[CostProvider]) -> CostProvider:
-    """``None`` -> the analytic default; anything else passes through."""
-    return ANALYTIC_COSTS if costs is None else costs
+#: ``costs=`` accepts a provider instance or a string reference:
+#: ``"analytic"`` or ``"profiled:<path/to/artifact.json>"``.
+CostRef = Union[None, str, CostProvider]
+
+
+def resolve_costs(costs: CostRef) -> CostProvider:
+    """``None`` -> the analytic default; a string resolves a named
+    provider (``"analytic"``, ``"profiled:<path>"`` — a committed
+    :meth:`ProfiledCosts.to_json` artifact); instances pass through."""
+    if costs is None:
+        return ANALYTIC_COSTS
+    if isinstance(costs, str):
+        if costs == "analytic":
+            return ANALYTIC_COSTS
+        if costs.startswith("profiled:"):
+            from .profiler import ProfiledCosts
+            return ProfiledCosts.from_json(costs[len("profiled:"):])
+        raise ValueError(f"unknown cost provider {costs!r}: expected "
+                         f"'analytic' or 'profiled:<path>'")
+    return costs
 
 
 class SegmentAggregates:

@@ -15,7 +15,7 @@ rates instead of datasheet rooflines (``dora.plan(..., costs=...)``).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Mapping, Sequence, Tuple
+from typing import List, Mapping, Optional, Sequence, Tuple
 
 
 def gpipe_latency(bf: Sequence[float], bb: Sequence[float], n_micro: int,
@@ -137,6 +137,10 @@ class ProfiledCosts:
     default_compute: float = 1.0
     default_bandwidth: float = 1.0
     name: str = "profiled"
+    #: Where the factors came from (backend, jax version, measurement
+    #: date, bench shapes, ...) — free-form strings, persisted by
+    #: ``to_json`` so committed calibration artifacts stay diffable.
+    provenance: Mapping[str, str] = dataclasses.field(default_factory=dict)
 
     def calibrate(self, topo):
         from .device import Topology
@@ -172,6 +176,58 @@ class ProfiledCosts:
         bw = {k: m / a for k, (a, m) in dict(link_bytes_per_s).items()
               if a > 0.0 and m > 0.0}
         return cls(compute_factor=comp, bandwidth_factor=bw)
+
+    # -- persistence (committed calibration artifacts) ----------------------
+    def to_dict(self) -> dict:
+        return {
+            "schema": "dora-profiled-costs/v1",
+            "name": self.name,
+            "compute_factor": dict(self.compute_factor),
+            "bandwidth_factor": dict(self.bandwidth_factor),
+            "default_compute": self.default_compute,
+            "default_bandwidth": self.default_bandwidth,
+            "provenance": dict(self.provenance),
+        }
+
+    def to_json(self, path: Optional[str] = None, indent: int = 1) -> str:
+        """Strict-JSON serialization (optionally written to ``path``):
+        factors + provenance, round-tripped exactly by :meth:`from_json`
+        so calibration artifacts can be committed and diffed."""
+        import json
+        text = json.dumps(self.to_dict(), indent=indent, sort_keys=True,
+                          allow_nan=False)
+        if path is not None:
+            with open(path, "w", encoding="utf-8") as f:
+                f.write(text + "\n")
+        return text
+
+    @classmethod
+    def from_dict(cls, doc: Mapping) -> "ProfiledCosts":
+        schema = doc.get("schema", "dora-profiled-costs/v1")
+        if not str(schema).startswith("dora-profiled-costs/"):
+            raise ValueError(f"not a ProfiledCosts artifact: {schema!r}")
+        return cls(
+            compute_factor={str(k): float(v) for k, v
+                            in doc.get("compute_factor", {}).items()},
+            bandwidth_factor={str(k): float(v) for k, v
+                              in doc.get("bandwidth_factor", {}).items()},
+            default_compute=float(doc.get("default_compute", 1.0)),
+            default_bandwidth=float(doc.get("default_bandwidth", 1.0)),
+            name=str(doc.get("name", "profiled")),
+            provenance={str(k): str(v) for k, v
+                        in doc.get("provenance", {}).items()})
+
+    @classmethod
+    def from_json(cls, path_or_text: str) -> "ProfiledCosts":
+        """Load from a JSON file path (or a raw JSON string)."""
+        import json
+        import os
+        if os.path.exists(path_or_text):
+            with open(path_or_text, encoding="utf-8") as f:
+                doc = json.load(f)
+        else:
+            doc = json.loads(path_or_text)
+        return cls.from_dict(doc)
 
 
 # ---------------------------------------------------------------------------

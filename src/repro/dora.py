@@ -29,9 +29,15 @@ latency/energy/QoE with speedup-vs-baseline columns::
                        strategies=["dora", "throughput_max", "chain_split"])
     print(cmp.summary()); cmp.to_json("compare.json")
 
-Cost fidelity is pluggable too: every verb accepts ``costs=`` (a
-``CostProvider`` — analytic rooflines by default, measurement-calibrated
-via ``repro.core.profiler.ProfiledCosts``).
+Cost fidelity is pluggable too: every verb accepts ``costs=`` — a
+``CostProvider`` instance, the string ``"analytic"`` (datasheet
+rooflines, the default), or ``"profiled:<path>"`` to load a committed
+:class:`repro.core.profiler.ProfiledCosts` calibration artifact::
+
+    report = dora.plan("smart_home_2", costs="profiled:calibration/host_cpu.json")
+
+``dora.calibrate()`` produces such artifacts by microbenchmarking the
+local host (see :mod:`repro.calibrate`).
 
 This module is deliberately jax-free: planning is analytic, so importing
 ``repro.dora`` never initializes an accelerator backend.
@@ -639,6 +645,53 @@ def serve(scenario: ScenarioRef, *, warm_replan: bool = True,
                         warm_replan=warm_replan)
 
 
+def calibrate(scenario: Optional[ScenarioRef] = None, *, quick: bool = True,
+              path: Optional[str] = None, cache=None):
+    """Microbenchmark this host and return a ``ProfiledCosts`` provider.
+
+    The only facade verb that touches jax: it runs the
+    :mod:`repro.calibrate` measurement suite (matmul peak, memory
+    bandwidth, timed zoo steps, contended stage rate) on the local
+    backend and converts the measured-vs-analytic gaps into cost
+    factors.
+
+    Without ``scenario`` this returns the host fleet's own per-device
+    calibration (devices ``host0..hostN``) — what the fidelity bench
+    plans with.  With a ``scenario``, the host factors are applied as a
+    *global* correction (``default_compute`` / ``default_bandwidth``)
+    so they reach the scenario's differently-named devices::
+
+        costs = dora.calibrate("smart_home_2", path="calibration/home.json")
+        report = dora.plan("smart_home_2", costs=costs)
+        # or later, from the committed artifact:
+        report = dora.plan("smart_home_2", costs="profiled:calibration/home.json")
+
+    ``path`` also writes the artifact as JSON; ``cache`` is a
+    :class:`repro.calibrate.MeasurementCache` (defaults to the on-disk
+    cache, pass ``MeasurementCache(path=None)`` to force fresh
+    measurements).
+    """
+    from .calibrate.host import calibrate_host
+    from .core.profiler import ProfiledCosts
+    host = calibrate_host(cache, quick=quick,
+                          path=None if scenario is not None else path)
+    if scenario is None:
+        return host
+    sc = get_scenario(scenario)
+    cf = list(host.compute_factor.values())
+    bf = list(host.bandwidth_factor.values())
+    out = ProfiledCosts(
+        default_compute=sum(cf) / len(cf) if cf else 1.0,
+        default_bandwidth=sum(bf) / len(bf) if bf else 1.0,
+        name=f"profiled-host/{sc.name}",
+        provenance={**dict(host.provenance),
+                    "applied_as": "global host-measured correction "
+                                  f"for scenario {sc.name}"})
+    if path is not None:
+        out.to_json(path)
+    return out
+
+
 # -- multi-tenant fleets --------------------------------------------------------
 def plan_fleet(fleet, *, topology=None,
                strategy="dora",
@@ -826,6 +879,6 @@ def simulate(scenario: ScenarioRef,
 __all__ = [
     "PlanReport", "ServeSession", "SimulationStep", "SimulationTrace",
     "StrategyOutcome", "ComparisonReport", "DEFAULT_COMPARISON",
-    "RuntimeState", "plan", "planner_for", "serve", "simulate", "compare",
-    "plan_fleet", "serve_fleet",
+    "RuntimeState", "calibrate", "plan", "planner_for", "serve", "simulate",
+    "compare", "plan_fleet", "serve_fleet",
 ]

@@ -1,7 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import (jax locks the
-# device count on first initialization).
+# This MUST run before any other import (jax locks the device count on
+# first initialization).  Append to XLA_FLAGS rather than overwrite so a
+# user-set flag string survives; an explicit device-count choice wins.
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512").strip()
 
 import argparse
 import dataclasses

@@ -1,0 +1,309 @@
+"""repro.calibrate — cost-provider semantics, cache, and plumbing.
+
+Planner-facing invariants run jax-free (the calibrate modules import
+jax lazily); the end-to-end measure→plan→execute loop is exercised in a
+subprocess smoke test marked ``slow`` (it needs forced host devices and
+real wall-clock measurement), with the fast tests covering every piece
+of plumbing underneath it.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+from helpers._hypothesis_compat import given, max_examples, settings, st
+
+from repro import dora
+from repro.calibrate import fidelity
+from repro.calibrate.host import host_costs, host_topology
+from repro.calibrate.timing import MeasurementCache, ensure_host_devices
+from repro.core.cost_model import (ANALYTIC_COSTS, Workload, resolve_costs)
+from repro.core.profiler import ProfiledCosts
+from repro.kernels import flops as kf
+from repro.scenarios import list_scenarios
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: Fake host measurements — enough for a topology without touching jax.
+MEASURE = {"matmul_peak_flops": 1e10, "memory_bw": 1e9,
+           "transfer_large_bps": 6e8, "transfer_small_bps": 1e8}
+
+SERVE_WL = Workload(global_batch=8, microbatch_size=1, training=False)
+
+
+def _layout(n_layers, n_devices):
+    bounds = [round(i * n_layers / n_devices) for i in range(n_devices + 1)]
+    return [(list(range(bounds[i], bounds[i + 1])), i)
+            for i in range(n_devices) if bounds[i + 1] > bounds[i]]
+
+
+# -- identity parity: all-1.0 ProfiledCosts == AnalyticCosts ----------------------
+@pytest.mark.parametrize("name", list_scenarios())
+def test_identity_profiled_matches_analytic(name):
+    analytic = dora.plan(name)
+    profiled = dora.plan(name, costs=ProfiledCosts())
+    assert json.dumps(dora._plan_dict(analytic.best), sort_keys=True) == \
+        json.dumps(dora._plan_dict(profiled.best), sort_keys=True)
+
+
+# -- monotonicity: slowing a device never speeds up its stage --------------------
+@settings(max_examples=max_examples(25), deadline=None)
+@given(factor=st.floats(min_value=0.05, max_value=1.0),
+       dev=st.integers(min_value=0, max_value=1))
+def test_slower_device_never_lowers_latency(factor, dev):
+    case = fidelity.QUICK_CASES[0]
+    graph = fidelity.proxy_graph(case)
+    topo = host_topology(MEASURE, 2)
+    layout = _layout(case.n_layers, 2)
+    base = fidelity.evaluate_layout(layout, graph, topo, SERVE_WL,
+                                    costs=ProfiledCosts())
+    slowed = fidelity.evaluate_layout(
+        layout, graph, topo, SERVE_WL,
+        costs=ProfiledCosts(compute_factor={f"host{dev}": factor}))
+    assert slowed.latency >= base.latency - 1e-12
+    s0, s1 = slowed.stages[dev], base.stages[dev]
+    assert s0.fwd_time >= s1.fwd_time - 1e-12
+    assert s0.bwd_time >= s1.bwd_time - 1e-12
+
+
+def test_halving_compute_factor_halves_stage_rate():
+    case = fidelity.QUICK_CASES[0]
+    graph = fidelity.proxy_graph(case)
+    topo = host_topology(MEASURE, 2)
+    layout = _layout(case.n_layers, 2)
+    full = fidelity.evaluate_layout(layout, graph, topo, SERVE_WL,
+                                    costs=ProfiledCosts())
+    half = fidelity.evaluate_layout(
+        layout, graph, topo, SERVE_WL,
+        costs=ProfiledCosts(default_compute=0.5))
+    # fwd_time = compute + send: halving the rate adds exactly one more
+    # baseline compute term, and the (unscaled) comm share keeps the
+    # total under 2x
+    assert half.latency > full.latency
+    for sh, sf in zip(half.stages, full.stages):
+        assert sf.fwd_time < sh.fwd_time <= 2.0 * sf.fwd_time + 1e-12
+
+
+# -- persistence round-trip -------------------------------------------------------
+def test_profiled_costs_json_round_trip(tmp_path):
+    pc = ProfiledCosts(compute_factor={"host0": 0.25, "host1": 0.5},
+                       bandwidth_factor={"hostmem": 0.7},
+                       default_compute=0.9, default_bandwidth=0.8,
+                       name="unit-test",
+                       provenance={"backend": "cpu/2/jax-0.0",
+                                   "date": "2026-08-08"})
+    path = str(tmp_path / "costs.json")
+    pc.to_json(path)
+    back = ProfiledCosts.from_json(path)
+    assert back == pc
+    # and from a raw JSON string too
+    assert ProfiledCosts.from_json(pc.to_json()) == pc
+
+
+def test_from_dict_rejects_foreign_schema():
+    with pytest.raises(ValueError, match="not a ProfiledCosts"):
+        ProfiledCosts.from_dict({"schema": "dora-bench-fidelity/v1"})
+
+
+def test_host_costs_factors_and_provenance():
+    pc = host_costs(MEASURE, 2, contended=1e9, name="t",
+                    provenance={"extra": "yes"})
+    claimed = 1e10 * 0.45                     # peak × default MFU
+    for i in range(2):
+        assert pc.compute_factor[f"host{i}"] == pytest.approx(1e9 / claimed)
+    assert pc.bandwidth_factor["hostmem"] == pytest.approx(6e8 / 1e9)
+    assert pc.name == "t"
+    assert pc.provenance["extra"] == "yes"
+    assert "backend" in pc.provenance and "date" in pc.provenance
+
+
+# -- resolve_costs string refs ----------------------------------------------------
+def test_resolve_costs_refs(tmp_path):
+    assert resolve_costs(None) is ANALYTIC_COSTS
+    assert resolve_costs("analytic") is ANALYTIC_COSTS
+    pc = ProfiledCosts(default_compute=0.5, name="disk")
+    path = str(tmp_path / "c.json")
+    pc.to_json(path)
+    loaded = resolve_costs(f"profiled:{path}")
+    assert loaded == pc
+    assert resolve_costs(pc) is pc
+    with pytest.raises(ValueError, match="unknown cost provider"):
+        resolve_costs("datasheet")
+
+
+def test_plan_accepts_profiled_path_ref(tmp_path):
+    path = str(tmp_path / "c.json")
+    ProfiledCosts(default_compute=0.5).to_json(path)
+    slow = dora.plan("traffic_monitor", costs=f"profiled:{path}")
+    fast = dora.plan("traffic_monitor")
+    assert slow.latency >= fast.latency
+
+
+# -- measurement cache ------------------------------------------------------------
+def test_cache_measures_once(tmp_path):
+    cache = MeasurementCache(path=str(tmp_path / "m.json"))
+    calls = []
+
+    def measure():
+        calls.append(1)
+        return 42.0
+
+    assert cache.get_or_measure("bench", "shape", measure) == 42.0
+    assert cache.get_or_measure("bench", "shape", measure) == 42.0
+    assert len(calls) == 1
+    assert (cache.hits, cache.misses) == (1, 1)
+
+
+def test_cache_persists_across_instances(tmp_path):
+    path = str(tmp_path / "m.json")
+    MeasurementCache(path=path).put("b", "s", 7.0)
+    again = MeasurementCache(path=path)
+    assert again.lookup("b", "s") == 7.0
+    assert len(again) == 1
+
+
+def test_cache_in_memory_mode(tmp_path):
+    cache = MeasurementCache(path=None)
+    cache.put("b", "s", 1.0)
+    assert cache.lookup("b", "s") == 1.0
+    assert not os.listdir(tmp_path)          # nothing written anywhere here
+
+
+def test_cache_ignores_corrupt_file(tmp_path):
+    path = str(tmp_path / "m.json")
+    with open(path, "w", encoding="utf-8") as f:
+        f.write("{not json")
+    cache = MeasurementCache(path=path)
+    assert len(cache) == 0
+    cache.put("b", "s", 2.0)                  # and recovers by rewriting
+    assert MeasurementCache(path=path).lookup("b", "s") == 2.0
+
+
+# -- XLA_FLAGS guard (ensure_host_devices + launch.dryrun header) ----------------
+def test_ensure_host_devices_appends_when_absent(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "--xla_cpu_foo=1")
+    ensure_host_devices(8)
+    assert os.environ["XLA_FLAGS"] == \
+        "--xla_cpu_foo=1 --xla_force_host_platform_device_count=8"
+
+
+def test_ensure_host_devices_respects_user_choice(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS",
+                       "--xla_force_host_platform_device_count=3")
+    ensure_host_devices(8)
+    assert os.environ["XLA_FLAGS"] == \
+        "--xla_force_host_platform_device_count=3"
+
+
+def test_ensure_host_devices_from_empty_env(monkeypatch):
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    ensure_host_devices(4)
+    assert os.environ["XLA_FLAGS"] == \
+        "--xla_force_host_platform_device_count=4"
+
+
+@pytest.mark.slow
+def test_dryrun_import_preserves_user_xla_flags():
+    code = ("import os\n"
+            "import repro.launch.dryrun\n"
+            "print(os.environ['XLA_FLAGS'])\n")
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=3 "
+                         "--xla_cpu_foo=1")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    flags = out.stdout.strip()
+    assert flags.count("--xla_force_host_platform_device_count") == 1
+    assert "--xla_force_host_platform_device_count=3" in flags
+    assert "--xla_cpu_foo=1" in flags
+
+
+# -- kernel FLOP counters ---------------------------------------------------------
+def test_flop_counters_scale():
+    assert kf.flash_attention_flops(1, 256, 4, 4, 64) == \
+        pytest.approx(kf.flash_attention_flops(1, 128, 4, 4, 64) * 4)
+    assert kf.decode_attention_flops(1, 4096, 4, 64) == \
+        pytest.approx(kf.decode_attention_flops(1, 2048, 4, 64) * 2)
+    assert kf.mlp_block_flops(16, 256, 1024) == 6.0 * 16 * 256 * 1024
+    assert kf.mlp_block_flops(16, 256, 1024, gated=False) == \
+        4.0 * 16 * 256 * 1024
+    for fn, args in ((kf.ssd_scan_flops, (1, 256, 4, 64, 1, 64)),
+                     (kf.rglru_scan_flops, (1, 256, 512)),):
+        assert fn(*args) > 0
+
+
+# -- proxy graph / fidelity plumbing ---------------------------------------------
+def test_proxy_graph_prices_gated_mlp():
+    case = fidelity.FidelityCase("traffic_monitor", 2, 8, 256, 1024, 8)
+    g = fidelity.proxy_graph(case)
+    assert len(g.nodes) == 8
+    node = g.nodes[0]
+    assert node.flops_fwd == kf.mlp_block_flops(case.tokens, 256, 1024)
+    assert node.flops_bwd == 3.0 * node.flops_fwd       # remat'd backward
+    assert node.param_bytes == 3 * 256 * 1024 * 4.0
+
+
+def test_fleet_memory_forces_pipelining():
+    case = fidelity.QUICK_CASES[0]
+    g = fidelity.proxy_graph(case)
+    mem = fidelity.fleet_memory(g, SERVE_WL, 2)
+    assert mem < g.total_params            # one device can't hold the model
+    assert 2 * mem > g.total_params        # but the fleet together can
+
+
+def test_plan_layout_is_multi_stage():
+    case = fidelity.QUICK_CASES[0]
+    g = fidelity.proxy_graph(case)
+    topo = host_topology(
+        MEASURE, 2, memory=fidelity.fleet_memory(g, SERVE_WL, 2))
+    layout, source = fidelity.plan_layout(g, topo, SERVE_WL)
+    assert source == "planner"
+    assert len(layout) >= 2
+    covered = sorted(i for ids, _ in layout for i in ids)
+    assert covered == list(range(case.n_layers))
+
+
+@pytest.mark.slow
+def test_fidelity_case_end_to_end_subprocess():
+    """The whole loop — measure, plan, price both ways, execute — on a
+    tiny case with forced host devices, in a clean process."""
+    code = (
+        "from repro.calibrate.timing import ensure_host_devices, "
+        "MeasurementCache\n"
+        "ensure_host_devices(2)\n"
+        "from repro.calibrate import fidelity\n"
+        "case = fidelity.FidelityCase('traffic_monitor', 2, 4, 128, 512, 4)\n"
+        "rec = fidelity.run_case(case, MeasurementCache(path=None), "
+        "quick=True)\n"
+        "assert rec['measured_s'] > 0.0\n"
+        "assert rec['calibrated']['predicted_s'] > 0.0\n"
+        "assert rec['n_stages'] >= 2\n"
+        "print('fidelity-ok', rec['calibrated']['rel_err'])\n")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, out.stderr
+    assert "fidelity-ok" in out.stdout
+
+
+def test_bench_artifact_is_committed_and_calibration_wins():
+    path = fidelity.BENCH_PATH
+    assert os.path.exists(path), "BENCH_fidelity.json must be committed"
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    assert doc["schema"] == fidelity.SCHEMA
+    cur = doc["current"]
+    assert len(cur["cases"]) >= 3
+    assert cur["mean_rel_err_calibrated"] < cur["mean_rel_err_uncalibrated"]
+
+
+def test_committed_host_calibration_artifact_loads():
+    path = os.path.join(REPO, "calibration", "host_cpu.json")
+    assert os.path.exists(path)
+    pc = resolve_costs(f"profiled:{path}")
+    assert pc.compute_factor                  # per-device factors present
+    assert "backend" in pc.provenance
