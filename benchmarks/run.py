@@ -30,6 +30,7 @@ HARNESSES = [
     "fig_fleet",
     "fig17_topk",
     "table4_planning_time",
+    "fig_serving_scale",
     "fig_fidelity",
     "roofline",
 ]

@@ -61,6 +61,26 @@ class ScheduleResult:
         (the serving simulator's per-device idle-draw input)."""
         return max(self.makespan - self.busy_seconds(name), 0.0)
 
+    def admission_interval(self, n_stages: int, latency: float) -> float:
+        """Steady-state admission interval of a pipeline executing this
+        schedule (the serving kernel's what-if primitive).
+
+        A pipeline's steady-state throughput is bounded by its
+        *bottleneck* — the busiest stage executor (``exec{i}``) or
+        network resource per request — not by the average stage span:
+        stages overlap across requests, so admitting faster than the
+        bottleneck span oversubscribes that device.  Falls back to the
+        balanced-pipeline approximation ``latency / n_stages`` when the
+        schedule carries no busy accounting (hand-built results)."""
+        spans = [self.busy_seconds(f"exec{i}") for i in range(n_stages)]
+        spans += list(self.resource_busy.values())
+        bottleneck = max((s for s in spans if s), default=0.0)
+        if bottleneck > 0.0:
+            # the bottleneck span never exceeds the makespan, but guard
+            # against hand-built schedules that claim otherwise
+            return max(min(bottleneck, latency), 1e-9)
+        return max(latency / max(n_stages, 1), 1e-9)
+
 
 class EventEngine:
     def __init__(self, tasks: Sequence[Task], resource_caps: Dict[str, float],

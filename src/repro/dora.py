@@ -73,11 +73,9 @@ TimelineItem = Union[DynamicsEvent, Tuple[str, DynamicsEvent]]
 DEFAULT_COMPARISON = ("dora", "throughput_max", "chain_split", "pareto_split")
 
 
-def _json_num(x: Optional[float]) -> Optional[float]:
-    """inf/nan -> None so exports stay strict-JSON parseable."""
-    if x is None or math.isinf(x) or math.isnan(x):
-        return None
-    return x
+# JSON-safe number coercion lives with the serving kernel now; the
+# old name stays importable from here (several modules and tests do).
+from .core.events import _json_num  # noqa: E402,F401
 
 
 def _plan_dict(plan: ParallelismPlan) -> Dict[str, object]:
@@ -864,7 +862,7 @@ def simulate(scenario: ScenarioRef,
                              "pass them to dora.serve instead")
         if copy:
             session = _copy.deepcopy(session)
-    from .sim.serving import normalize_timeline
+    from .core.events import normalize_timeline
     timeline = normalize_timeline(
         events if events is not None else session.report.scenario.timeline)
     steps: List[SimulationStep] = []

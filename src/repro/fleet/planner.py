@@ -369,7 +369,7 @@ class FleetPlanner:
                 yield combo
 
     def _demand(self, tenant: Scenario) -> float:
-        flops = self.graphs[tenant.name].total_flops_fwd()
+        flops = self.graphs[tenant.name].total_flops_fwd
         rate = tenant.request_rate or 1.0
         return max(flops, 1.0) * rate
 

@@ -65,6 +65,15 @@ class Scenario:
     # ``mode="requests"``).  For training deployments one "request" is
     # one iteration.  ``None`` → half the plan's service capacity.
     request_rate: Optional[float] = None
+    # arrival process from the serving kernel's zoo
+    # (``repro.core.events``: DiurnalArrivals / MMPPArrivals /
+    # FlashCrowdArrivals / TraceArrivals), modulating ``request_rate``;
+    # ``None`` → homogeneous Poisson.
+    arrival: Optional[object] = None
+    # multi-class SLO tiers (``repro.core.events.RequestClass`` tuple,
+    # e.g. interactive vs. batch); empty → one implicit class at the
+    # load's SLO.
+    request_classes: Tuple[object, ...] = ()
 
     @property
     def mode(self) -> str:

@@ -14,6 +14,8 @@ import dataclasses
 from ..core.adapter import DynamicsEvent
 from ..core.cost_model import PAPER_SERVE_WORKLOAD, PAPER_TRAIN_WORKLOAD
 from ..core.device import CATALOG, MBPS, LinkResource, Topology, make_setting
+from ..core.events import (DiurnalArrivals, FlashCrowdArrivals,
+                           interactive_batch)
 from ..core.qoe import QoESpec
 from . import Scenario, register
 
@@ -227,6 +229,41 @@ register(Scenario(
     qoe=QoESpec(t_qoe=0.8, lam=50.0),
     tags=("train", "pod"),
     request_rate=0.4,
+))
+
+
+# -- trace-driven arrival scenarios --------------------------------------------
+# Serving deployments whose load is *not* a flat Poisson stream: the
+# serving kernel's arrival zoo (``repro.core.events``) modulates the
+# registered mean rate, and multi-class tiers judge each request
+# against its own SLO.  ``dora.simulate(..., mode="requests")`` picks
+# both up automatically.
+register(Scenario(
+    name="transit_hub",
+    description="Transit-station kiosks: commuter queries swing through "
+                "a rush-hour cycle; an interactive rider tier rides "
+                "alongside a lax batch analytics tier.",
+    topology=lambda: make_setting("traffic_monitor"),
+    model="qwen3-0.6b", workload=SERVE_WL,
+    qoe=QoESpec(t_qoe=0.3, lam=100.0),
+    tags=("serve", "trace-driven"),
+    request_rate=4.0,
+    arrival=DiurnalArrivals(period_s=240.0, amplitude=0.9),
+    request_classes=interactive_batch(0.25, 2.0, interactive_share=0.75),
+))
+
+register(Scenario(
+    name="stadium_gate",
+    description="Stadium-entrance screening: steady trickle until the "
+                "gates open, then a flash crowd 8x the baseline slams "
+                "the fleet for a minute.",
+    topology=lambda: make_setting("traffic_monitor"),
+    model="qwen3-0.6b", workload=SERVE_WL,
+    qoe=QoESpec(t_qoe=0.4, lam=100.0),
+    tags=("serve", "trace-driven"),
+    request_rate=2.0,
+    arrival=FlashCrowdArrivals(peak_multiplier=8.0, t_start=30.0,
+                               ramp_s=10.0, hold_s=60.0),
 ))
 
 

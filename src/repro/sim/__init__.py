@@ -14,16 +14,17 @@ from ..strategies.baselines import (BaselineError, alpa_plan, asteroid_plan,
 from .runner import (COMPARISON_PLANNERS, ExecResult, compare_planners,
                      dora_plan, execute_plan, run_strategy, scenario_case,
                      setting_and_graph, workload_for)
+from ..core.events import poisson_arrivals
 from .fleet import FleetAction, FleetTrace, simulate_fleet
-from .serving import (AdapterAction, RequestRecord, ServingLoad, ServingTrace,
-                      poisson_arrivals, simulate_requests)
+from .serving import (AdapterAction, RequestLog, RequestRecord, ServingLoad,
+                      ServingTrace, simulate_requests)
 
 __all__ = [
     "BaselineError", "alpa_plan", "asteroid_plan", "brute_force_optimal",
     "edgeshard_plan", "metis_plan", "COMPARISON_PLANNERS", "ExecResult",
     "compare_planners", "dora_plan", "execute_plan", "run_strategy",
     "scenario_case", "setting_and_graph", "workload_for",
-    "AdapterAction", "RequestRecord", "ServingLoad", "ServingTrace",
-    "poisson_arrivals", "simulate_requests",
+    "AdapterAction", "RequestLog", "RequestRecord", "ServingLoad",
+    "ServingTrace", "poisson_arrivals", "simulate_requests",
     "FleetAction", "FleetTrace", "simulate_fleet",
 ]

@@ -1,22 +1,25 @@
 """Multi-tenant request-level serving: N concurrent streams, one fleet.
 
 Extends :mod:`repro.sim.serving` to a co-planned fleet: every tenant
-gets its own open-loop Poisson arrival stream (at its registered
-``request_rate``) served by its own pipeline on its *exclusive* device
+gets its own open-loop arrival stream (at its registered
+``request_rate``, through its registered arrival process / request
+classes) served by its own pipeline on its *exclusive* device
 allotment, while the fleet timeline (bandwidth/compute shifts and
 device churn) plays out through the :class:`~repro.fleet.FleetSession`
 — rebalances move devices between tenants mid-run and bill each moved
 tenant's migration stall against its own admissions.
 
-Bookkeeping follows the single-tenant fluid model per tenant:
-admissions at the plan's bottleneck interval, per-request non-idle
-energy on the tenant's devices.  Fleet-level attribution:
+All bookkeeping delegates to the shared serving kernel
+(:mod:`repro.core.events`): one :class:`~repro.core.events.Stream` per
+tenant replays the fleet timeline, vectorizing each inter-event
+segment with the same Lindley recurrence as the single-tenant path.
+Fleet-level attribution:
 
-* **Idle draw** is billed once per fleet device over the whole horizon
-  and attributed to the tenant owning the device at the end of the run
-  (devices that changed hands mid-run stay whole — conservative and
-  simple); devices owned by no tenant land in the fleet-wide totals
-  only.
+* **Idle draw** is billed once per fleet device over its *presence
+  interval* and prorated across the tenants that owned the device, by
+  ownership interval (:class:`~repro.core.events.OwnershipTracker`) —
+  a device that changed hands mid-run bills each owner for its own
+  span; spans owned by no tenant land in the fleet-wide totals only.
 * **Oversubscription** is checked, not clamped: summing every tenant's
   compute-busy seconds per device must stay within the horizon, since
   allotments are exclusive — :meth:`FleetTrace.oversubscribed_devices`
@@ -33,10 +36,9 @@ from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 from ..core.adapter import DynamicsEvent
-from ..dora import _json_num
-from .serving import (DEFAULT_N_REQUESTS, AdapterAction, RequestRecord,
-                      ServingLoad, ServingTrace, _ActivePlan, _freeze,
-                      normalize_timeline, poisson_arrivals)
+from ..core import events as kernel
+from ..core.events import (DEFAULT_N_REQUESTS, AdapterAction, RequestLog,
+                           ServingLoad, ServingTrace, _json_num)
 
 #: Seed stride between tenants so their arrival processes are
 #: independent but each stays deterministic per (fleet seed, tenant).
@@ -69,6 +71,10 @@ class FleetTrace:
     per_device_busy: Dict[int, float]         # summed across tenants
     horizon_s: float
     rebalances: int
+    #: (t, {tenant: allotment}) snapshots — the ownership history the
+    #: idle-draw proration was computed from
+    ownership: List[Tuple[float, Dict[str, Tuple[int, ...]]]] = \
+        dataclasses.field(default_factory=list)
 
     @property
     def energy(self) -> float:
@@ -107,6 +113,10 @@ class FleetTrace:
             "rebalances": self.rebalances,
             "assignments": {k: list(v)
                             for k, v in self.assignments.items()},
+            "ownership": [{"t": _json_num(t),
+                           "assignments": {k: list(v)
+                                           for k, v in snap.items()}}
+                          for t, snap in self.ownership],
             "per_device_energy_j": {str(d): _json_num(e) for d, e in
                                     sorted(self.per_device_energy.items())},
             "per_device_utilization": {str(d): self.utilization(d) for d in
@@ -154,6 +164,7 @@ def simulate_fleet(fleet, *,
                    session=None,
                    span_s: Optional[float] = None,
                    seed: int = 0,
+                   chunk: Optional[int] = None,
                    **overrides) -> FleetTrace:
     """Run one multi-tenant request-level serving simulation.
 
@@ -164,7 +175,9 @@ def simulate_fleet(fleet, *,
     ``span_s`` seconds (default: 60 s or 1.25x the last timeline
     event).  ``events`` overrides the fleet timeline.  Pass an armed
     ``session=`` (from ``dora.serve_fleet``) to reuse its plans;
-    keyword ``overrides`` otherwise flow to ``dora.serve_fleet``.
+    ``chunk`` bounds the kernel's vectorization width (a validation
+    knob — results are invariant to it); keyword ``overrides``
+    otherwise flow to ``dora.serve_fleet``.
     """
     from .. import dora            # local import: dora lazily imports sims
     from ..fleet import resolve_fleet
@@ -183,13 +196,12 @@ def simulate_fleet(fleet, *,
             raise ValueError("overrides are ignored when reusing a "
                              "session; pass them to dora.serve_fleet")
     topo = session.planner.topo
-    timeline = normalize_timeline(
+    timeline = kernel.normalize_timeline(
         events if events is not None else fs.timeline)
     span = span_s if span_s is not None else _default_span(timeline)
 
     names = [t.name for t in fs.tenants]
     tenant_loads: Dict[str, ServingLoad] = {}
-    arrivals: List[Tuple[float, str]] = []
     for i, tn in enumerate(fs.tenants):
         load = (loads or {}).get(tn.name)
         if load is None:
@@ -197,107 +209,113 @@ def simulate_fleet(fleet, *,
             rate = tn.request_rate or 0.5 / max(active0.latency, 1e-9)
             n = max(8, min(int(math.ceil(rate * span)),
                            2 * DEFAULT_N_REQUESTS))
-            load = ServingLoad(rate=rate, n_requests=n,
-                               seed=seed + i * _TENANT_SEED_STRIDE)
+            load = ServingLoad(
+                rate=rate, n_requests=n,
+                seed=seed + i * _TENANT_SEED_STRIDE,
+                arrival=getattr(tn, "arrival", None),
+                classes=tuple(getattr(tn, "request_classes", ()) or ()))
         tenant_loads[tn.name] = load
-        for a in poisson_arrivals(load.rate, load.n_requests, load.seed):
-            arrivals.append((float(a), tn.name))
-    arrivals.sort()
 
-    def freeze(name: str) -> _ActivePlan:
+    def freeze(name: str) -> kernel.ActivePlan:
         tp = session.plan.tenants[name]
-        return _freeze(session.sessions[name].current, tp.allotment)
+        return kernel.freeze_plan(session.sessions[name].current,
+                                  tp.allotment, topo)
 
-    active: Dict[str, _ActivePlan] = {n: freeze(n) for n in names}
-    next_free: Dict[str, float] = {n: 0.0 for n in names}
-    records: Dict[str, List[RequestRecord]] = {n: [] for n in names}
+    streams: Dict[str, kernel.Stream] = {
+        n: kernel.Stream(tenant_loads[n].sample_arrivals(),
+                         plan=freeze(n), chunk=chunk)
+        for n in names}
     actions: List[FleetAction] = []
-    service_energy: Dict[str, Dict[int, float]] = {n: {} for n in names}
-    busy: Dict[str, Dict[int, float]] = {n: {} for n in names}
+    presence = kernel.PresenceTracker(topo.n)
+    ownership = kernel.OwnershipTracker(session.plan.assignments)
 
     def fire(label: str, ev: DynamicsEvent) -> None:
+        presence.apply(ev)
         reacted = session.on_dynamics(ev)
         for act in reacted:
-            if act.tenant not in active:     # whole-fleet marker row
+            if act.tenant not in streams:    # whole-fleet marker row
                 actions.append(FleetAction(
                     t=ev.t, label=label, tenant=act.tenant,
                     action=act.action, react_s=act.react_s,
                     stall_s=act.stall_s, latency_after=act.latency_after,
                     allotment=act.allotment))
                 continue
-            if act.stall_s > 0.0:
-                next_free[act.tenant] = (max(next_free[act.tenant], ev.t)
-                                         + act.stall_s)
+            streams[act.tenant].stall(ev.t, act.stall_s)
             actions.append(FleetAction(
                 t=ev.t, label=label, tenant=act.tenant, action=act.action,
                 react_s=act.react_s, stall_s=act.stall_s,
                 latency_after=act.latency_after, allotment=act.allotment))
         if reacted:
             for n in names:                  # allotments may have moved
-                active[n] = freeze(n)
+                streams[n].plan = freeze(n)
+            ownership.update(ev.t, session.plan.assignments)
 
-    ev_i = 0
-    for a, name in arrivals:
-        while ev_i < len(timeline) and timeline[ev_i][1].t <= a:
-            fire(*timeline[ev_i])
-            ev_i += 1
-        plan = active[name]
-        start = max(a, next_free[name])
-        finish = start + plan.latency
-        next_free[name] = start + plan.interval
-        records[name].append(RequestRecord(arrival=a, start=start,
-                                           finish=finish))
-        acc = service_energy[name]
-        for d, e in plan.per_device_energy.items():
-            non_idle = e - topo.devices[d].p_idle * plan.latency
-            acc[d] = acc.get(d, 0.0) + max(non_idle, 0.0)
-        for d, b in plan.compute_busy.items():
-            busy[name][d] = busy[name].get(d, 0.0) + b
-    while ev_i < len(timeline):
-        fire(*timeline[ev_i])
-        ev_i += 1
+    kernel.replay(timeline, [streams[n] for n in names], fire)
 
     horizon = max([0.0,
-                   *(a for a, _ in arrivals),
-                   *(r.finish for rs in records.values() for r in rs
-                     if r.served),
+                   *(float(s.arrivals[-1]) for s in streams.values()
+                     if len(s.arrivals)),
+                   *(s.last_finite_finish() for s in streams.values()),
                    *(ev.t for _, ev in timeline)])
 
-    # -- energy attribution: idle once per device, service to its tenant
-    final = session.plan.assignments
+    # -- energy attribution: idle draw once per device over its presence
+    # interval, prorated across owning tenants by ownership interval;
+    # service energy to the tenant that admitted the request
+    presence_iv = presence.intervals(horizon)
+    fleet_idle = presence.seconds(horizon)
     fleet_energy: Dict[int, float] = {
-        d: dev.p_idle * horizon for d, dev in enumerate(topo.devices)}
+        d: dev.p_idle * fleet_idle.get(d, 0.0)
+        for d, dev in enumerate(topo.devices)}
+    tenant_idle: Dict[str, Dict[int, float]] = {n: {} for n in names}
+    for d, spans in ownership.spans(horizon).items():
+        for lo, hi, owner in spans:
+            if owner not in tenant_idle:
+                continue
+            secs = kernel.overlap_seconds(presence_iv.get(d, ()), lo, hi)
+            if secs > 0.0:
+                tenant_idle[owner][d] = \
+                    tenant_idle[owner].get(d, 0.0) + secs
+
+    final = session.plan.assignments
     traces: "OrderedDict[str, ServingTrace]" = OrderedDict()
     fleet_busy: Dict[int, float] = {}
     for tn in fs.tenants:
         name = tn.name
         load = tenant_loads[name]
-        for d, e in service_energy[name].items():
+        stream = streams[name]
+        for d, e in stream.service_energy.items():
             fleet_energy[d] = fleet_energy.get(d, 0.0) + e
-        for d, b in busy[name].items():
+        for d, b in stream.busy.items():
             fleet_busy[d] = fleet_busy.get(d, 0.0) + b
-        tenant_energy = dict(service_energy[name])
-        for d in final.get(name, ()):
+        tenant_energy = dict(stream.service_energy)
+        idle_s = tenant_idle[name]
+        for d, secs in idle_s.items():
             tenant_energy[d] = tenant_energy.get(d, 0.0) \
-                + topo.devices[d].p_idle * horizon
+                + topo.devices[d].p_idle * secs
         slo = load.slo_s if load.slo_s is not None else tn.qoe.t_qoe
+        arr, starts, finishes = stream.arrays()
+        log = RequestLog(arr, starts, finishes,
+                         class_id=load.sample_class_ids(len(arr)),
+                         classes=load.classes)
         traces[name] = ServingTrace(
             scenario=f"{fs.name}/{name}", strategy="fleet", load=load,
-            slo_s=slo, requests=records[name],
+            slo_s=slo, requests=log,
             actions=[AdapterAction(t=a.t, label=a.label, action=a.action,
                                    react_s=a.react_s, stall_s=a.stall_s,
                                    latency_after=a.latency_after)
                      for a in actions if a.tenant == name],
             per_device_energy=tenant_energy,
-            per_device_busy=dict(busy[name]),
-            horizon_s=float(horizon))
+            per_device_busy=dict(stream.busy),
+            horizon_s=float(horizon),
+            per_device_idle_s=idle_s)
 
     return FleetTrace(fleet=fs.name, tenants=traces, actions=actions,
                       assignments={k: tuple(v) for k, v in final.items()},
                       per_device_energy=fleet_energy,
                       per_device_busy=fleet_busy,
                       horizon_s=float(horizon),
-                      rebalances=session.rebalances)
+                      rebalances=session.rebalances,
+                      ownership=ownership.history)
 
 
 __all__ = ["FleetAction", "FleetTrace", "simulate_fleet"]

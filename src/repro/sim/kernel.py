@@ -1,0 +1,9 @@
+"""Alias for the shared serving kernel.
+
+The kernel lives in :mod:`repro.core.events` so the scenario registry
+and the plan-level engine can use it without importing the simulator
+package; ``repro.sim.kernel`` re-exports it under the name the
+simulators advertise.
+"""
+from ..core.events import *  # noqa: F401,F403
+from ..core.events import __all__  # noqa: F401

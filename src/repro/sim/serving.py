@@ -3,20 +3,24 @@
 The plan-level stack answers "how fast is one iteration/token?";
 a serving deployment is judged on what *requests* experience: tail
 latency and SLO attainment under queueing, runtime dynamics and fleet
-churn.  This module layers an open-loop request queue on top of the
-planning stack:
+churn.  This module is a thin adapter over the shared serving kernel
+(:mod:`repro.core.events`), which owns arrival generation, the
+vectorized admission/queueing recurrence, dynamics segmentation and
+energy attribution; what remains here is the strategy wiring:
 
-* **Arrivals** — a Poisson process at the scenario's registered
-  ``request_rate`` (deterministic per seed) or an explicit arrival
-  trace.
+* **Arrivals** — the load's arrival process (Poisson at the scenario's
+  registered ``request_rate`` by default; diurnal/MMPP/flash-crowd
+  curves and multi-class SLO tiers via :class:`ServingLoad`) or an
+  explicit arrival trace.
 * **Service** — a fluid pipeline model of the active plan: a request
   admitted at ``s`` finishes at ``s + plan.latency``; the pipeline
-  admits the next request after the bottleneck interval (the busiest
-  stage executor / network resource per request from the Phase-2
-  schedule — stages overlap across requests, so throughput is bounded
-  by the slowest stage, not the average; full ``latency`` for
-  training, where the flush + gradient sync serialize iterations).
-  Service time is sampled at admission.
+  admits the next request after the bottleneck interval
+  (:meth:`~repro.core.engine.ScheduleResult.admission_interval` — the
+  busiest stage executor / network resource per request from the
+  Phase-2 schedule; full ``latency`` for training, where the flush +
+  gradient sync serialize iterations).  Between dynamics events the
+  kernel serves whole arrival segments as array ops, so 10^6-request
+  traces run in seconds.
 * **Dynamics** — the scenario's timeline plays out mid-run.  With the
   ``dora`` strategy, events flow through the armed
   :class:`~repro.dora.ServeSession` (cumulative conditions, §4.3
@@ -27,335 +31,48 @@ planning stack:
   fluid-fair contention, and churn that removes a device the plan
   placed layers on makes every subsequent request fail until the
   device rejoins.
-* **Energy** — idle draw is a baseline: every device is billed
-  ``p_idle`` over the whole run exactly once, and each request adds
-  only the active plan's *non-idle* per-device energy (compute + DVFS
-  + network bytes — the plan's energy minus the idle draw its window
+* **Energy** — idle draw is billed once per device over its *presence
+  interval* (a device that leaves at ``t`` stops drawing idle power at
+  ``t``; see ``ServingTrace.per_device_idle_s``), and each request adds
+  only the active plan's non-idle per-device energy (compute + DVFS +
+  network bytes — the plan's energy minus the idle draw its window
   already prices).  Overlapping pipeline windows therefore never bill
-  the same idle second twice.  Departed devices are still billed idle
-  for simplicity — a conservative upper bound.
+  the same idle second twice.
 
-Entry points: :func:`simulate_requests` (also reachable as
-``dora.simulate(scenario, mode="requests")``) returning a
+The public API is unchanged: :func:`simulate_requests` (also reachable
+as ``dora.simulate(scenario, mode="requests")``) returns a
 :class:`ServingTrace` with p50/p95/p99 latency, SLO attainment %,
-per-device energy and every adapter action.
+per-device energy and every adapter action.  Moved internals
+(``poisson_arrivals``, ``normalize_timeline``, ``_ActivePlan``, …) stay
+importable from here behind a :class:`DeprecationWarning` shim.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from ..core.adapter import DynamicsEvent, RuntimeState
-from ..core.plans import ParallelismPlan
 from ..core.scheduler import NetworkScheduler
-from ..dora import _json_num
-
-#: Default number of requests when a load doesn't specify one.
-DEFAULT_N_REQUESTS = 200
-
-
-@dataclasses.dataclass(frozen=True)
-class ServingLoad:
-    """Open-loop request load for one serving simulation.
-
-    ``rate`` — mean arrivals per second (Poisson process);
-    ``n_requests`` — how many requests to generate;
-    ``slo_s`` — per-request latency SLO (defaults to the scenario's
-    ``t_qoe``); ``seed`` — arrival-process seed (same seed + same rate
-    → identical arrivals; the exponential gaps scale with ``1/rate``,
-    so traces at different rates are coupled and queueing is monotone
-    in rate).
-    """
-
-    rate: float
-    n_requests: int = DEFAULT_N_REQUESTS
-    slo_s: Optional[float] = None
-    seed: int = 0
-
-
-def poisson_arrivals(rate: float, n_requests: int, seed: int = 0) -> np.ndarray:
-    """Arrival times of an open-loop Poisson process (deterministic per
-    seed; gaps are standard exponentials scaled by ``1/rate``, so the
-    same seed at a higher rate yields a pointwise-compressed trace)."""
-    if rate <= 0.0:
-        raise ValueError(f"arrival rate must be positive, got {rate}")
-    if n_requests <= 0:
-        raise ValueError(f"n_requests must be positive, got {n_requests}")
-    rng = np.random.default_rng(seed)
-    return np.cumsum(rng.exponential(1.0 / rate, size=int(n_requests)))
-
-
-@dataclasses.dataclass(frozen=True)
-class RequestRecord:
-    """One request's life: arrival → service start → finish.
-    ``finish`` is ``inf`` when the request could not be served (the
-    static plan lost a device to churn)."""
-
-    arrival: float
-    start: float
-    finish: float
-
-    @property
-    def latency(self) -> float:
-        return self.finish - self.arrival
-
-    @property
-    def waiting(self) -> float:
-        return self.start - self.arrival
-
-    @property
-    def served(self) -> bool:
-        return math.isfinite(self.finish)
-
-
-@dataclasses.dataclass(frozen=True)
-class AdapterAction:
-    """What the runtime layer did about one timeline event."""
-
-    t: float
-    label: str
-    action: str            # "reschedule" | "replan" | "repriced" | "degraded"
-    react_s: float
-    stall_s: float
-    latency_after: float   # per-request service latency after the event
-
-
-@dataclasses.dataclass
-class _ActivePlan:
-    """The serving loop's view of whichever plan is currently live,
-    with device keys mapped back to *original* topology indices."""
-
-    latency: float
-    interval: float
-    per_device_energy: Dict[int, float]
-    compute_busy: Dict[int, float]  # schedule compute-busy secs per request
-    devices: Tuple[int, ...]
-
-
-def _service_interval(plan: ParallelismPlan) -> float:
-    """Steady-state admission interval of the pipeline (fluid model):
-    inference requests overlap across stages; training iterations
-    serialize on the pipeline flush + gradient sync.
-
-    A pipeline's steady-state throughput is bounded by its *bottleneck*
-    — the busiest stage executor (or network resource) per request —
-    not by the average stage span.  Refined plans carry a Phase-2
-    schedule whose per-executor busy seconds give that bound exactly;
-    admitting any faster would oversubscribe the bottleneck device.
-    Unrefined plans (no schedule) fall back to the balanced-pipeline
-    approximation ``latency / n_stages``.
-    """
-    if plan.training:
-        return max(plan.latency, 1e-9)
-    sched = plan.schedule
-    if sched is not None and hasattr(sched, "busy_seconds"):
-        spans = [sched.busy_seconds(f"exec{i}")
-                 for i in range(plan.n_stages)]
-        spans += list(getattr(sched, "resource_busy", {}).values())
-        bottleneck = max((s for s in spans if s), default=0.0)
-        if bottleneck > 0.0:
-            # the bottleneck span never exceeds the makespan, but guard
-            # against hand-built schedules that claim otherwise
-            return max(min(bottleneck, plan.latency), 1e-9)
-    return max(plan.latency / max(plan.n_stages, 1), 1e-9)
-
-
-def _freeze(plan: ParallelismPlan, active: Sequence[int]) -> _ActivePlan:
-    """Snapshot a (possibly re-indexed) plan into original device space.
-
-    ``compute_busy`` comes from the Phase-2 schedule
-    (``ScheduleResult.busy_seconds`` of each stage's executor) when the
-    plan carries one — a device whose stage computes for 80 ms of a
-    300 ms request is *computing* 80 ms — falling back to the full plan
-    latency for unrefined plans.  It feeds the trace's utilization
-    report only; energy bookkeeping bills idle draw once over the whole
-    run and adds each request's non-idle energy on top.
-    """
-    idx = list(active)
-    sched = plan.schedule
-    compute: Dict[int, float] = {}
-    for i, s in enumerate(plan.stages):
-        t = None
-        if sched is not None and hasattr(sched, "busy_seconds"):
-            t = sched.busy_seconds(f"exec{i}") or None
-        if t is None:
-            t = plan.latency
-        for d in s.devices:
-            compute[idx[d]] = max(compute.get(idx[d], 0.0), t)
-    return _ActivePlan(
-        latency=plan.latency,
-        interval=_service_interval(plan),
-        per_device_energy={idx[d]: e
-                           for d, e in plan.per_device_energy.items()},
-        compute_busy=compute,
-        devices=tuple(sorted({idx[d] for d in plan.devices})))
-
-
-@dataclasses.dataclass
-class ServingTrace:
-    """Everything one request-level simulation produced."""
-
-    scenario: str
-    strategy: str
-    load: ServingLoad
-    slo_s: float
-    requests: List[RequestRecord]
-    actions: List[AdapterAction]
-    per_device_energy: Dict[int, float]
-    #: schedule-level compute-busy seconds per device over the run
-    #: (from ``ScheduleResult.busy_seconds``) — the utilization input
-    per_device_busy: Dict[int, float]
-    horizon_s: float
-
-    def utilization(self, device: int) -> float:
-        """Fraction of the run this device spent computing.
-
-        The *raw* busy/horizon ratio — a value above 1.0 means the
-        admission policy oversubscribed the device (more compute-seconds
-        queued than wall-clock available).  The old silent clamp to 1.0
-        hid exactly that signal from the multi-tenant path; use
-        :meth:`oversubscribed` for the boolean verdict.
-        """
-        if self.horizon_s <= 0.0:
-            return 0.0
-        return self.per_device_busy.get(device, 0.0) / self.horizon_s
-
-    def oversubscribed(self, device: int, tol: float = 1e-6) -> bool:
-        """True when more busy-seconds were booked on ``device`` than the
-        run's horizon holds — the plan (or a co-tenant) admitted faster
-        than the device can serve."""
-        return self.utilization(device) > 1.0 + tol
-
-    @property
-    def oversubscribed_devices(self) -> List[int]:
-        return sorted(d for d in self.per_device_busy
-                      if self.oversubscribed(d))
-
-    # -- latency distribution ---------------------------------------------------
-    def latencies(self) -> np.ndarray:
-        return np.array([r.latency for r in self.requests])
-
-    def percentile(self, q: float) -> float:
-        """Latency percentile over ALL requests; ``inf`` (not NaN) when
-        the quantile falls among failed/unserved ones."""
-        with np.errstate(invalid="ignore"):
-            v = float(np.percentile(self.latencies(), q))
-        return math.inf if math.isnan(v) else v
-
-    @property
-    def p50(self) -> float:
-        return self.percentile(50.0)
-
-    @property
-    def p95(self) -> float:
-        return self.percentile(95.0)
-
-    @property
-    def p99(self) -> float:
-        return self.percentile(99.0)
-
-    @property
-    def mean_latency(self) -> float:
-        served = [r.latency for r in self.requests if r.served]
-        return float(np.mean(served)) if served else math.inf
-
-    @property
-    def slo_attainment(self) -> float:
-        """Fraction of requests served within the SLO (failed = missed)."""
-        if not self.requests:
-            return 1.0
-        ok = sum(1 for r in self.requests
-                 if r.served and r.latency <= self.slo_s)
-        return ok / len(self.requests)
-
-    @property
-    def n_failed(self) -> int:
-        return sum(1 for r in self.requests if not r.served)
-
-    @property
-    def energy(self) -> float:
-        return sum(self.per_device_energy.values())
-
-    @property
-    def replans(self) -> int:
-        return sum(1 for a in self.actions if a.action == "replan")
-
-    def to_dict(self) -> Dict[str, object]:
-        return {
-            "scenario": self.scenario,
-            "strategy": self.strategy,
-            "rate_rps": _json_num(self.load.rate),
-            "n_requests": len(self.requests),
-            "slo_s": _json_num(self.slo_s),
-            "latency_s": {"p50": _json_num(self.p50),
-                          "p95": _json_num(self.p95),
-                          "p99": _json_num(self.p99),
-                          "mean": _json_num(self.mean_latency)},
-            "slo_attainment": self.slo_attainment,
-            "failed_requests": self.n_failed,
-            "energy_j": _json_num(self.energy),
-            "per_device_energy_j": {str(d): _json_num(e)
-                                    for d, e in
-                                    sorted(self.per_device_energy.items())},
-            "per_device_utilization": {str(d): self.utilization(d)
-                                       for d in
-                                       sorted(self.per_device_energy)},
-            "oversubscribed_devices": self.oversubscribed_devices,
-            "horizon_s": _json_num(self.horizon_s),
-            "actions": [{
-                "t": a.t, "label": a.label, "action": a.action,
-                "react_s": _json_num(a.react_s),
-                "stall_s": _json_num(a.stall_s),
-                "latency_after_s": _json_num(a.latency_after),
-            } for a in self.actions],
-        }
-
-    def summary(self) -> str:
-        def fmt(x: float) -> str:
-            return f"{x * 1e3:.0f} ms" if math.isfinite(x) else "unserved"
-        lines = [
-            f"serving {self.scenario} [{self.strategy}]: "
-            f"{len(self.requests)} requests @ {self.load.rate:g}/s "
-            f"over {self.horizon_s:.1f}s",
-            f"latency p50/p95/p99: {fmt(self.p50)} / {fmt(self.p95)} / "
-            f"{fmt(self.p99)}  (SLO {self.slo_s:g}s)",
-            f"SLO attainment {self.slo_attainment:.1%}"
-            + (f"  ({self.n_failed} failed)" if self.n_failed else ""),
-            f"energy {self.energy:.1f} J across "
-            f"{len(self.per_device_energy)} devices (idle draw included)",
-        ]
-        for a in self.actions:
-            stall = f" stall {a.stall_s:.2f}s" if a.stall_s > 0 else ""
-            lines.append(f"  t={a.t:6.1f}s  {a.label:48s} -> "
-                         f"{a.action:10s}{stall} latency "
-                         f"{fmt(a.latency_after)}")
-        return "\n".join(lines)
-
-
-def normalize_timeline(source) -> List[Tuple[str, DynamicsEvent]]:
-    """``DynamicsEvent``s and/or (label, event) pairs → labeled pairs
-    sorted by time (the shape both simulate modes replay)."""
-    timeline: List[Tuple[str, DynamicsEvent]] = []
-    for item in source or ():
-        if isinstance(item, DynamicsEvent):
-            timeline.append((f"event@t={item.t:g}s", item))
-        else:
-            label, ev = item
-            timeline.append((label, ev))
-    return sorted(timeline, key=lambda kv: kv[1].t)
+from ..core import events as kernel
+from ..core.events import (DEFAULT_N_REQUESTS, AdapterAction, RequestLog,
+                           RequestRecord, ServingLoad, ServingTrace)
 
 
 def default_load(scenario, plan_latency: float) -> ServingLoad:
-    """The scenario's registered request rate, or a half-capacity
-    fallback for ad-hoc scenarios that don't declare one."""
+    """The scenario's registered request rate (plus any registered
+    arrival process / request classes), or a half-capacity fallback for
+    ad-hoc scenarios that don't declare one."""
     rate = getattr(scenario, "request_rate", None)
     if rate is None:
         rate = 0.5 / max(plan_latency, 1e-9)
-    return ServingLoad(rate=rate)
+    return ServingLoad(
+        rate=rate,
+        arrival=getattr(scenario, "arrival", None),
+        classes=tuple(getattr(scenario, "request_classes", ()) or ()))
 
 
 def simulate_requests(scenario,
@@ -366,6 +83,7 @@ def simulate_requests(scenario,
                       session=None,
                       report=None,
                       arrivals: Optional[Sequence[float]] = None,
+                      chunk: Optional[int] = None,
                       **overrides) -> ServingTrace:
     """Run one request-level serving simulation.
 
@@ -377,8 +95,10 @@ def simulate_requests(scenario,
     under the merged conditions (fluid-fair contention) and breaks
     outright when churn removes a device it placed layers on.
     ``events`` defaults to the scenario's registered timeline;
-    ``arrivals`` (explicit trace, seconds) overrides the Poisson
-    process.  Keyword ``overrides`` flow to ``dora.serve``/``dora.plan``.
+    ``arrivals`` (explicit trace, seconds) overrides the load's arrival
+    process.  ``chunk`` bounds the kernel's vectorization width (a
+    validation knob — results are invariant to it).  Keyword
+    ``overrides`` flow to ``dora.serve``/``dora.plan``.
     """
     from .. import dora  # local import: dora lazily imports this module
 
@@ -402,7 +122,8 @@ def simulate_requests(scenario,
                 raise ValueError("overrides are ignored when reusing a "
                                  "session; pass them to dora.serve instead")
         report = session.report
-        active = _freeze(session.current, session.active)
+        topo = report.topology
+        active = kernel.freeze_plan(session.current, session.active, topo)
     else:
         if report is None:
             report = dora.plan(sc, strategy=strategy, **overrides)
@@ -410,9 +131,9 @@ def simulate_requests(scenario,
             raise ValueError(
                 f"report= was planned for ({report.scenario.name!r}, "
                 f"{report.strategy!r}), not ({sc.name!r}, {strategy!r})")
-        scheduler = NetworkScheduler(report.topology, report.qoe)
-        active = _freeze(report.best, range(report.topology.n))
-    topo = report.topology
+        topo = report.topology
+        scheduler = NetworkScheduler(topo, report.qoe)
+        active = kernel.freeze_plan(report.best, range(topo.n), topo)
     qoe = report.qoe
 
     if load is None:
@@ -424,9 +145,9 @@ def simulate_requests(scenario,
         if len(arr) and arr[0] < 0.0:
             raise ValueError("arrival times must be non-negative")
     else:
-        arr = poisson_arrivals(load.rate, load.n_requests, load.seed)
+        arr = load.sample_arrivals()
 
-    timeline = normalize_timeline(
+    timeline = kernel.normalize_timeline(
         events if events is not None else sc.timeline)
 
     # static-strategy runtime view (the dora path keeps its own inside
@@ -434,91 +155,90 @@ def simulate_requests(scenario,
     static_state = RuntimeState()
     static_fleet = set(range(topo.n))
     static_devices = set(active.devices)
-    static_alive = True
 
-    records: List[RequestRecord] = []
+    stream = kernel.Stream(arr, plan=active, chunk=chunk)
+    presence = kernel.PresenceTracker(topo.n)
     actions: List[AdapterAction] = []
-    service_energy: Dict[int, float] = {}       # non-idle joules per device
-    compute_busy: Dict[int, float] = {}
-    next_free = 0.0
-    ev_i = 0
 
     def fire(label: str, ev: DynamicsEvent) -> None:
-        nonlocal active, next_free, static_state, static_alive
+        nonlocal static_state
+        presence.apply(ev)
         if strategy == "dora":
             new, act, react = session.on_dynamics(ev)
             stall = (float(new.meta.get("switch_stall_s", 0.0))
                      if act == "replan" else 0.0)
-            if stall > 0.0:
-                next_free = max(next_free, ev.t) + stall
-            active = _freeze(new, session.active)
+            stream.stall(ev.t, stall)
+            stream.plan = kernel.freeze_plan(new, session.active, topo)
             actions.append(AdapterAction(t=ev.t, label=label, action=act,
                                          react_s=react, stall_s=stall,
-                                         latency_after=active.latency))
+                                         latency_after=stream.plan.latency))
             return
         # static baseline: merge conditions, apply churn, reprice
         t0 = time.perf_counter()
         static_state = static_state.apply(ev)
         static_fleet.difference_update(ev.leave)
         static_fleet.update(ev.join)
-        static_alive = static_devices <= static_fleet
-        if not static_alive:
+        stream.alive = static_devices <= static_fleet
+        if not stream.alive:
             act, lat = "degraded", math.inf
         else:
             repriced = scheduler.evaluate_fair(
                 report.best,
                 compute_speed=dict(static_state.compute_speed),
                 bandwidth_scale=dict(static_state.bandwidth_scale))
-            active = _freeze(repriced, range(topo.n))
-            act, lat = "repriced", active.latency
+            stream.plan = kernel.freeze_plan(repriced, range(topo.n), topo)
+            act, lat = "repriced", stream.plan.latency
         actions.append(AdapterAction(t=ev.t, label=label, action=act,
                                      react_s=time.perf_counter() - t0,
                                      stall_s=0.0, latency_after=lat))
 
-    for a in arr:
-        while ev_i < len(timeline) and timeline[ev_i][1].t <= a:
-            fire(*timeline[ev_i])
-            ev_i += 1
-        if strategy != "dora" and not static_alive:
-            records.append(RequestRecord(arrival=float(a), start=float(a),
-                                         finish=math.inf))
-            continue
-        start = max(float(a), next_free)
-        finish = start + active.latency
-        next_free = start + active.interval
-        records.append(RequestRecord(arrival=float(a), start=start,
-                                     finish=finish))
-        for d, e in active.per_device_energy.items():
-            # strip the idle draw the plan priced into its own window —
-            # the baseline p_idle·horizon below bills it exactly once,
-            # even when pipelined windows overlap
-            non_idle = e - topo.devices[d].p_idle * active.latency
-            service_energy[d] = service_energy.get(d, 0.0) \
-                + max(non_idle, 0.0)
-        for d, b in active.compute_busy.items():
-            compute_busy[d] = compute_busy.get(d, 0.0) + b
-    # consume the rest of the timeline so the trace covers every event
-    while ev_i < len(timeline):
-        fire(*timeline[ev_i])
-        ev_i += 1
+    kernel.replay(timeline, [stream], fire)
 
+    arr_out, starts, finishes = stream.arrays()
     horizon = max([0.0, float(arr[-1]) if len(arr) else 0.0,
-                   *(r.finish for r in records if r.served),
+                   stream.last_finite_finish(),
                    *(ev.t for _, ev in timeline)])
+    idle_s = presence.seconds(horizon)
     per_device_energy: Dict[int, float] = {}
     for d, dev in enumerate(topo.devices):
-        per_device_energy[d] = service_energy.get(d, 0.0) \
-            + dev.p_idle * horizon
+        per_device_energy[d] = stream.service_energy.get(d, 0.0) \
+            + dev.p_idle * idle_s.get(d, 0.0)
 
+    log = RequestLog(arr_out, starts, finishes,
+                     class_id=load.sample_class_ids(len(arr_out)),
+                     classes=load.classes)
     return ServingTrace(scenario=sc.name, strategy=strategy, load=load,
-                        slo_s=slo, requests=records, actions=actions,
+                        slo_s=slo, requests=log, actions=actions,
                         per_device_energy=per_device_energy,
-                        per_device_busy=dict(compute_busy),
-                        horizon_s=float(horizon))
+                        per_device_busy=dict(stream.busy),
+                        horizon_s=float(horizon),
+                        per_device_idle_s=idle_s)
+
+
+#: moved internals kept importable with a DeprecationWarning (the
+#: public serving API above is unchanged)
+_MOVED = {
+    "poisson_arrivals": "poisson_arrivals",
+    "normalize_timeline": "normalize_timeline",
+    "_ActivePlan": "ActivePlan",
+    "_freeze": "freeze_plan",
+    "_service_interval": "service_interval",
+}
+
+
+def __getattr__(name: str):
+    target = _MOVED.get(name)
+    if target is not None:
+        warnings.warn(
+            f"repro.sim.serving.{name} moved to "
+            f"repro.core.events.{target}; import it from there",
+            DeprecationWarning, stacklevel=2)
+        return getattr(kernel, target)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 __all__ = [
-    "ServingLoad", "RequestRecord", "AdapterAction", "ServingTrace",
-    "poisson_arrivals", "default_load", "normalize_timeline",
-    "simulate_requests", "DEFAULT_N_REQUESTS",
+    "ServingLoad", "RequestRecord", "RequestLog", "AdapterAction",
+    "ServingTrace", "default_load", "simulate_requests",
+    "DEFAULT_N_REQUESTS",
 ]

@@ -1,0 +1,100 @@
+"""Regenerate ``serving_golden.json`` — the serving-kernel parity lockfile.
+
+Run from the repo root against a KNOWN-GOOD request simulator (normally
+the commit *before* a serving-engine change lands)::
+
+    PYTHONPATH=src python tests/golden/gen_serving_golden.py
+
+``tests/test_serving_kernel.py`` then asserts the vectorized serving
+kernel still produces these exact request-level metrics: p50/p95/p99
+latency, SLO attainment, failed count and per-device energy to 1e-9
+relative.  The recorded cases deliberately avoid device ``leave``/
+``join`` churn so the idle-energy attribution fix (billing departed
+devices only over their presence interval) does not shift the locked
+numbers; churn coverage comes from the segmentation property tests.
+Regenerate only when a PR *intentionally* changes serving semantics —
+and say so in the PR description.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+OUT = os.path.join(HERE, "serving_golden.json")
+
+#: (scenario, strategy, rate, n_requests, seed) — no-churn timelines
+#: only (see module docstring).
+CASES = (
+    ("smart_home_1", "dora", 0.16, 400, 0),
+    ("hospital_ward", "dora", 6.0, 400, 1),
+    ("retail_analytics", "chain_split", 5.0, 300, 2),
+    ("smart_home_1", "chain_split", 0.3, 250, 3),
+)
+
+#: (fleet, span_s, seed, {tenant: (rate, n_requests, tenant_seed)})
+FLEET_CASES = (
+    ("smart_home_assist", 120.0, 0,
+     {"voice_assistant": (2.0, 240, 100), "vision_monitor": (5.0, 600, 200)}),
+)
+
+
+def trace_fingerprint(tr) -> dict:
+    return {
+        "n_requests": len(tr.requests),
+        "p50": tr.p50, "p95": tr.p95, "p99": tr.p99,
+        "mean": tr.mean_latency,
+        "slo_attainment": tr.slo_attainment,
+        "n_failed": tr.n_failed,
+        "energy_j": tr.energy,
+        "per_device_energy_j": {str(d): e for d, e in
+                                sorted(tr.per_device_energy.items())},
+        "per_device_busy_s": {str(d): b for d, b in
+                              sorted(tr.per_device_busy.items())},
+        "horizon_s": tr.horizon_s,
+        "actions": [[a.t, a.action] for a in tr.actions],
+    }
+
+
+def generate() -> dict:
+    from repro import dora
+    from repro.sim.serving import ServingLoad, simulate_requests
+    from repro.sim.fleet import simulate_fleet
+
+    doc: dict = {"schema": "dora-serving-golden/v1", "cases": {},
+                 "fleet": {}}
+    for scenario, strategy, rate, n, seed in CASES:
+        load = ServingLoad(rate=rate, n_requests=n, seed=seed)
+        tr = simulate_requests(scenario, strategy=strategy, load=load)
+        doc["cases"][f"{scenario}|{strategy}"] = {
+            "scenario": scenario, "strategy": strategy,
+            "load": {"rate": rate, "n_requests": n, "seed": seed},
+            "trace": trace_fingerprint(tr),
+        }
+    for fleet, span, seed, loads in FLEET_CASES:
+        tload = {name: ServingLoad(rate=r, n_requests=n, seed=s)
+                 for name, (r, n, s) in loads.items()}
+        ftr = simulate_fleet(fleet, loads=tload, span_s=span, seed=seed)
+        doc["fleet"][fleet] = {
+            "span_s": span, "seed": seed,
+            "loads": {k: {"rate": v.rate, "n_requests": v.n_requests,
+                          "seed": v.seed} for k, v in tload.items()},
+            "rebalances": ftr.rebalances,
+            "energy_j": ftr.energy,
+            "horizon_s": ftr.horizon_s,
+            "per_device_energy_j": {str(d): e for d, e in
+                                    sorted(ftr.per_device_energy.items())},
+            "assignments": {k: list(v)
+                            for k, v in sorted(ftr.assignments.items())},
+            "tenants": {name: trace_fingerprint(t)
+                        for name, t in ftr.tenants.items()},
+        }
+    return doc
+
+
+if __name__ == "__main__":
+    doc = generate()
+    with open(OUT, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"wrote {OUT}")

@@ -372,6 +372,55 @@ def test_simulate_fleet_energy_attribution_consistent():
     assert owned == set(trace.per_device_energy)
 
 
+def test_fleet_idle_prorated_by_ownership_through_rebalances():
+    """Idle draw must follow the *ownership history* through mid-run
+    rebalances, intersected with each device's presence interval.
+    Historically every device's idle was billed to whichever tenant
+    held it in the final assignment, over the full horizon — wrong as
+    soon as a rebalance moved a device or a camera powered down."""
+    trace = simulate_fleet("traffic_intersection", seed=5)
+    horizon = trace.horizon_s
+    assert trace.rebalances >= 2 and horizon > 80.0
+    assert len(trace.ownership) >= 2          # initial snapshot + shuffles
+    # the rebalancer really moved a device between tenants mid-run
+    owner_of = [{d: n for n, devs in snap.items() for d in devs}
+                for _, snap in trace.ownership]
+    assert any(owner_of[0].get(d) != later.get(d)
+               for later in owner_of[1:] for d in later)
+
+    # device 3 is powered down for [20, 60); everyone else is always on
+    def presence_secs(d, lo, hi):
+        secs = hi - lo
+        if d == 3:
+            secs -= max(0.0, min(hi, 60.0) - max(lo, 20.0))
+        return secs
+
+    # rebuild each tenant's idle bill from first principles: ownership
+    # snapshots x presence, independent of the kernel's trackers
+    expected = {name: {} for name in trace.tenants}
+    bounds = [t for t, _ in trace.ownership] + [horizon]
+    for (t0, snap), t1 in zip(trace.ownership, bounds[1:]):
+        for tenant, allot in snap.items():
+            for d in allot:
+                secs = presence_secs(d, t0, min(t1, horizon))
+                if secs > 0.0:
+                    expected[tenant][d] = \
+                        expected[tenant].get(d, 0.0) + secs
+    for name, tr in trace.tenants.items():
+        assert tr.per_device_idle_s == pytest.approx(expected[name])
+
+    # every present second is billed exactly once across tenants...
+    for d in range(4):
+        total_idle = sum(tr.per_device_idle_s.get(d, 0.0)
+                         for tr in trace.tenants.values())
+        assert total_idle == pytest.approx(presence_secs(d, 0.0, horizon))
+    # ...so per-device tenant energies add up to the fleet-level bill
+    for d, fleet_e in trace.per_device_energy.items():
+        tenant_e = sum(tr.per_device_energy.get(d, 0.0)
+                       for tr in trace.tenants.values())
+        assert tenant_e == pytest.approx(fleet_e, rel=1e-9)
+
+
 def test_simulate_fleet_session_validation(assist_session):
     with pytest.raises(ValueError, match="armed for fleet"):
         simulate_fleet("traffic_intersection", session=assist_session)

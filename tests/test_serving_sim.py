@@ -20,8 +20,8 @@ from repro.core.device import CATALOG, Topology
 from repro.core.graph_builders import GraphSpec, build_lm_graph
 from repro.core.plans import ParallelismPlan, Stage
 from repro.core.qoe import QoESpec
-from repro.sim.serving import (ServingLoad, ServingTrace, poisson_arrivals,
-                               simulate_requests)
+from repro.core.events import poisson_arrivals
+from repro.sim.serving import ServingLoad, ServingTrace, simulate_requests
 
 SPEC = GraphSpec("small", n_layers=12, d_model=512, n_heads=8, n_kv_heads=4,
                  d_ff=2048, vocab=8000, seq_len=256)
@@ -190,6 +190,36 @@ def test_static_strategy_fails_requests_when_its_device_leaves():
     assert static.p99 == math.inf
     # failed requests serialize to strict JSON (inf -> null)
     json.dumps(static.to_dict(), allow_nan=False)
+
+
+def test_idle_energy_billed_only_over_presence_interval():
+    """A device that leaves mid-run stops drawing idle power the moment
+    it departs and resumes when it rejoins.  Historically the simulator
+    billed every fleet device's idle draw over the *full* horizon, so
+    leave-heavy timelines overcharged departed devices."""
+    sc = tiny_scenario()
+    victim = 2                      # dora's plan spans devices {0, 1} only
+    leave_t, rejoin_t = 12.0, 30.0
+    events = [
+        ("victim leaves", DynamicsEvent(t=leave_t, leave=(victim,))),
+        ("victim rejoins", DynamicsEvent(t=rejoin_t, join=(victim,))),
+    ]
+    trace = simulate_requests(
+        sc, strategy="dora",
+        load=ServingLoad(rate=1.0, n_requests=100, seed=9), events=events)
+    horizon = trace.horizon_s
+    assert horizon > rejoin_t
+    away = rejoin_t - leave_t
+    assert trace.per_device_busy.get(victim, 0.0) == 0.0
+    assert trace.per_device_idle_s[victim] == pytest.approx(horizon - away)
+    for stayed in (0, 1):
+        assert trace.per_device_idle_s[stayed] == pytest.approx(horizon)
+    # the victim never computes, so its whole bill is idle draw over its
+    # presence window — strictly less than the old full-horizon charge
+    p_idle = sc.build_topology().devices[victim].p_idle
+    assert trace.per_device_energy[victim] == \
+        pytest.approx(p_idle * (horizon - away))
+    assert trace.per_device_energy[victim] < p_idle * horizon
 
 
 def test_conditions_on_departed_links_are_filtered():
@@ -410,7 +440,7 @@ def test_service_interval_uses_bottleneck_stage():
     interval must be 0.9 s (pre-fix: latency/n_stages = 0.5 s, which
     oversubscribes the bottleneck device 1.8x)."""
     from repro.core.engine import ScheduleResult
-    from repro.sim.serving import _service_interval
+    from repro.core.events import service_interval as _service_interval
 
     def mk(training=False, sched=None, lat=1.0, n=2):
         stages = [Stage(node_ids=[i], devices=[i], microbatch_split={i: 1.0})
