@@ -32,6 +32,7 @@ HARNESSES = [
     "table4_planning_time",
     "fig_serving_scale",
     "fig_fidelity",
+    "fig_chaos",
     "roofline",
 ]
 

@@ -40,6 +40,21 @@ class DynamicsEvent:
     ``leave``/``join`` are fleet churn: device indices (of the original
     deployment topology) that drop out of or rejoin the fleet at ``t``.
     Churn always forces a full replan — the plan's device set changed.
+
+    The remaining fields are **unannounced faults** — ground-truth
+    changes the runtime cannot observe at ``t`` and only acts on once
+    the heartbeat detector notices (``miss_limit × beat_interval``
+    later; see ``repro.resilience``):
+
+    * ``crash`` — devices that stop silently (no leave announcement,
+      no further heartbeats); repair is announced via a later ``join``.
+    * ``link_down``/``link_up`` — link resources (by name) that go dark
+      / come back; requests routed over a dark link fail.
+    * ``straggler`` — silent per-device slowdown factors: the device
+      keeps heartbeating nominal numbers while actually serving slower.
+
+    Fault fields never contribute to :meth:`magnitude` — they are
+    invisible to the announced-event adapter path by construction.
     """
 
     t: float
@@ -47,10 +62,27 @@ class DynamicsEvent:
     bandwidth_scale: Dict[str, float] = dataclasses.field(default_factory=dict)
     leave: Tuple[int, ...] = ()
     join: Tuple[int, ...] = ()
+    crash: Tuple[int, ...] = ()
+    link_down: Tuple[str, ...] = ()
+    link_up: Tuple[str, ...] = ()
+    straggler: Dict[int, float] = dataclasses.field(default_factory=dict)
 
     @property
     def is_churn(self) -> bool:
         return bool(self.leave or self.join)
+
+    @property
+    def is_fault(self) -> bool:
+        """True when the event carries unannounced fault content."""
+        return bool(self.crash or self.link_down or self.link_up
+                    or self.straggler)
+
+    @property
+    def is_announced(self) -> bool:
+        """True when the event carries content the runtime can see at
+        ``t`` (condition shifts or churn announcements)."""
+        return bool(self.compute_speed or self.bandwidth_scale
+                    or self.is_churn)
 
     def magnitude(self) -> float:
         if self.is_churn:

@@ -407,13 +407,25 @@ class RequestLog(Sequence):
     """Array-backed request records — the ``ServingTrace.requests``
     container.  Iterating yields :class:`RequestRecord` views for
     compatibility, but metrics read the arrays directly so 10^6-request
-    traces never materialize a million objects."""
+    traces never materialize a million objects.
 
-    __slots__ = ("arrival", "start", "finish", "class_id", "classes")
+    The optional resilience arrays (``attempts``, ``hedged``) are only
+    populated by the chaos engine (:mod:`repro.resilience.engine`):
+    ``attempts[i]`` counts how many times request ``i`` was issued
+    (1 = served first try; >1 = retried), ``hedged[i]`` marks requests
+    whose retry was hedged (re-issued without backoff).  Fault-free
+    runs leave them ``None`` — all existing consumers see the exact
+    historical container shape.
+    """
+
+    __slots__ = ("arrival", "start", "finish", "class_id", "classes",
+                 "attempts", "hedged")
 
     def __init__(self, arrival, start, finish,
                  class_id: Optional[np.ndarray] = None,
-                 classes: Tuple[RequestClass, ...] = ()):
+                 classes: Tuple[RequestClass, ...] = (),
+                 attempts: Optional[np.ndarray] = None,
+                 hedged: Optional[np.ndarray] = None):
         self.arrival = np.asarray(arrival, dtype=np.float64)
         self.start = np.asarray(start, dtype=np.float64)
         self.finish = np.asarray(finish, dtype=np.float64)
@@ -424,6 +436,27 @@ class RequestLog(Sequence):
         self.classes = tuple(classes)
         if self.class_id is not None and len(self.class_id) != len(self):
             raise ValueError("class_id length differs from arrivals")
+        self.attempts = (None if attempts is None
+                         else np.asarray(attempts, dtype=np.int64))
+        self.hedged = (None if hedged is None
+                       else np.asarray(hedged, dtype=bool))
+        for name in ("attempts", "hedged"):
+            arr = getattr(self, name)
+            if arr is not None and len(arr) != len(self):
+                raise ValueError(f"{name} length differs from arrivals")
+
+    @property
+    def n_retried(self) -> int:
+        """Requests that needed more than one attempt."""
+        if self.attempts is None:
+            return 0
+        return int(np.count_nonzero(self.attempts > 1))
+
+    @property
+    def n_hedged(self) -> int:
+        if self.hedged is None:
+            return 0
+        return int(np.count_nonzero(self.hedged))
 
     @classmethod
     def from_records(cls, records: Sequence[RequestRecord]) -> "RequestLog":
@@ -442,8 +475,11 @@ class RequestLog(Sequence):
     def __getitem__(self, i):
         if isinstance(i, slice):
             cid = None if self.class_id is None else self.class_id[i]
+            att = None if self.attempts is None else self.attempts[i]
+            hed = None if self.hedged is None else self.hedged[i]
             return RequestLog(self.arrival[i], self.start[i],
-                              self.finish[i], cid, self.classes)
+                              self.finish[i], cid, self.classes,
+                              attempts=att, hedged=hed)
         if i < 0:
             i += len(self)
         if not 0 <= i < len(self):
@@ -640,13 +676,32 @@ class Stream:
         return out
 
 
+def describe_event(ev: DynamicsEvent) -> str:
+    """A human label for a bare event — fault kinds get descriptive
+    labels (unannounced faults are the interesting rows in a chaos
+    trace); announced-only events keep the historical ``event@t`` form."""
+    parts = []
+    if ev.crash:
+        parts.append("crash: device " + ",".join(map(str, ev.crash)))
+    if ev.link_down:
+        parts.append("link down: " + ",".join(ev.link_down))
+    if ev.link_up:
+        parts.append("link up: " + ",".join(ev.link_up))
+    if ev.straggler:
+        parts.append("straggler: " + ",".join(
+            f"{d}->x{format(f, '.3g')}" for d, f in sorted(ev.straggler.items())))
+    if not parts:
+        return f"event@t={ev.t:g}s"
+    return "; ".join(parts)
+
+
 def normalize_timeline(source) -> List[Tuple[str, DynamicsEvent]]:
     """``DynamicsEvent``s and/or (label, event) pairs → labeled pairs
     sorted by time (the shape both simulate modes replay)."""
     timeline: List[Tuple[str, DynamicsEvent]] = []
     for item in source or ():
         if isinstance(item, DynamicsEvent):
-            timeline.append((f"event@t={item.t:g}s", item))
+            timeline.append((describe_event(item), item))
         else:
             label, ev = item
             timeline.append((label, ev))
@@ -785,6 +840,13 @@ class ServingTrace:
     #: whole horizon unless the device left the fleet mid-run
     per_device_idle_s: Dict[int, float] = dataclasses.field(
         default_factory=dict)
+    #: chaos-engine fault records (one dict per injected fault: kind,
+    #: target, onset/detect/restore times, mttr_s, affected) — empty for
+    #: fault-free runs
+    faults: List[Dict[str, object]] = dataclasses.field(default_factory=list)
+    #: mean time-to-recovery over service-affecting faults (onset →
+    #: serving restored), ``None`` when no fault touched the service
+    mttr_s: Optional[float] = None
 
     def __post_init__(self) -> None:
         if not isinstance(self.requests, RequestLog):
@@ -859,6 +921,21 @@ class ServingTrace:
     @property
     def n_failed(self) -> int:
         return int(np.count_nonzero(~self.requests.served))
+
+    @property
+    def n_retried(self) -> int:
+        """Requests that needed more than one attempt (chaos runs)."""
+        return self.requests.n_retried
+
+    @property
+    def n_hedged(self) -> int:
+        """Requests whose retry was hedged (chaos runs)."""
+        return self.requests.n_hedged
+
+    @property
+    def failed_rate(self) -> float:
+        n = len(self.requests)
+        return self.n_failed / n if n else 0.0
 
     @property
     def energy(self) -> float:
@@ -937,6 +1014,14 @@ class ServingTrace:
             out["per_device_idle_s"] = {
                 str(d): _json_num(s)
                 for d, s in sorted(self.per_device_idle_s.items())}
+        if self.faults or self.mttr_s is not None:
+            out["retried_requests"] = self.n_retried
+            out["hedged_requests"] = self.n_hedged
+            out["mttr_s"] = _json_num(self.mttr_s) \
+                if self.mttr_s is not None else None
+            out["faults"] = [
+                {k: (_json_num(v) if isinstance(v, float) else v)
+                 for k, v in f.items()} for f in self.faults]
         return out
 
     def summary(self) -> str:
@@ -974,7 +1059,12 @@ class AdapterAction:
 
     t: float
     label: str
-    action: str            # "reschedule" | "replan" | "repriced" | "degraded"
+    #: "reschedule" | "replan" | "repriced" | "degraded" — plus the
+    #: chaos-engine verdicts: "fallback" (instant precomputed-ladder
+    #: switch), "brownout" (no QoE-feasible plan: batch admissions
+    #: shed), "unobserved" (a pure fault the announced-event path
+    #: cannot see)
+    action: str
     react_s: float
     stall_s: float
     latency_after: float   # per-request service latency after the event
@@ -988,7 +1078,7 @@ __all__ = [
     "RequestClass", "interactive_batch", "assign_classes",
     "ServingLoad", "RequestRecord", "RequestLog",
     "ActivePlan", "freeze_plan", "service_interval",
-    "Stream", "replay", "normalize_timeline",
+    "Stream", "replay", "normalize_timeline", "describe_event",
     "PresenceTracker", "OwnershipTracker", "overlap_seconds",
     "ServingTrace", "AdapterAction",
 ]

@@ -492,6 +492,14 @@ class ServeSession:
     state: RuntimeState = dataclasses.field(default_factory=RuntimeState)
     active: Tuple[int, ...] = ()
     plans: List[ParallelismPlan] = dataclasses.field(default_factory=list)
+    #: the fleet (original ids) ``current`` is indexed in; equal to
+    #: ``active`` except during degraded segments, where churn shrank
+    #: the fleet but no plan could be built on the survivors
+    plan_fleet: Tuple[int, ...] = ()
+    #: True while the surviving fleet has no servable plan (e.g. churn
+    #: disconnected the routed topology, or nothing QoE-feasible
+    #: remains); cleared by the next successful churn replan (rejoin)
+    degraded: bool = False
     # planner knobs carried across churn replans (report.topology is
     # already cost-calibrated, so churn planners must NOT re-apply a
     # CostProvider — only the search/scheduler configs carry over)
@@ -506,16 +514,18 @@ class ServeSession:
     def __post_init__(self) -> None:
         if not self.active:
             self.active = tuple(range(self.report.topology.n))
+        if not self.plan_fleet:
+            self.plan_fleet = self.active
         if not self.plans:
             self.plans = list(self.report.candidates)
 
     def _translate(self, state: RuntimeState) -> RuntimeState:
-        """Original-index conditions → active-fleet index space.
+        """Original-index conditions → plan-fleet index space.
         Bandwidth entries for links that left with their devices are
         filtered out (they come back into force on rejoin)."""
-        if self.active == tuple(range(self.report.topology.n)):
+        if self.plan_fleet == tuple(range(self.report.topology.n)):
             return state
-        mapping = {orig: pos for pos, orig in enumerate(self.active)}
+        mapping = {orig: pos for pos, orig in enumerate(self.plan_fleet)}
         alive = self.adapter.topo.resources
         return RuntimeState(
             compute_speed={mapping[d]: v
@@ -538,6 +548,16 @@ class ServeSession:
         """
         if event.is_churn:
             return self._on_churn(event)
+        if event.is_fault and not event.is_announced:
+            # silent fault: the session cannot observe it (that is the
+            # point of unannounced faults) — the resilience engine
+            # reacts on *detection*, never on onset
+            return self.current, "unobserved", 0.0
+        if self.degraded:
+            # no servable plan for the surviving fleet: absorb the
+            # conditions into state so a recovery replan sees them
+            self.state = self.state.apply(event)
+            return self.current, "degraded", 0.0
         prior = self.state
         merged = prior.apply(event)
         replan_fn = (lambda: list(self.plans)) if replan else None
@@ -563,30 +583,41 @@ class ServeSession:
             raise ValueError("churn event would remove every device")
         merged = self.state.apply(event)
         keep = tuple(sorted(fleet))
-        sub, mapping = full.subset(keep)
-        # ``full`` is the session's calibrated topology, so the default
-        # (identity) cost provider is correct here — re-passing the
-        # original CostProvider would calibrate twice
-        planner = DoraPlanner(self.report.graph, sub, self.report.qoe,
-                              partitioner_config=self.partitioner_config,
-                              scheduler_config=self.scheduler_config,
-                              adapter_config=self.adapter.config)
-        # active-fleet plan device -> new-fleet device (drops leavers)
-        trans = {pos: mapping[orig] for pos, orig in enumerate(self.active)
-                 if orig in mapping}
-        if self.warm_replan and not event.join:
-            # device-LEAVE churn is the latency-critical replan (capacity
-            # dropped mid-service): warm-start from the surviving
-            # candidate pool (§4.3 — steady-state replans are
-            # ~pool-sized), falling back to the fresh DP when nothing
-            # survives QoE-feasibly.  JOIN churn always runs the full
-            # search — surviving candidates place no work on the new
-            # device, so only a fresh DP can reclaim its capacity, and
-            # the old plan keeps serving meanwhile.
-            result = planner.replan(self.report.workload, self.plans,
-                                    mapping=trans)
-        else:
-            result = planner.plan(self.report.workload)
+        try:
+            sub, mapping = full.subset(keep)
+            # ``full`` is the session's calibrated topology, so the
+            # default (identity) cost provider is correct here —
+            # re-passing the original CostProvider would calibrate twice
+            planner = DoraPlanner(self.report.graph, sub, self.report.qoe,
+                                  partitioner_config=self.partitioner_config,
+                                  scheduler_config=self.scheduler_config,
+                                  adapter_config=self.adapter.config)
+            # plan-fleet device -> new-fleet device (drops leavers)
+            trans = {pos: mapping[orig]
+                     for pos, orig in enumerate(self.plan_fleet)
+                     if orig in mapping}
+            if self.warm_replan and not event.join:
+                # device-LEAVE churn is the latency-critical replan
+                # (capacity dropped mid-service): warm-start from the
+                # surviving candidate pool (§4.3 — steady-state replans
+                # are ~pool-sized), falling back to the fresh DP when
+                # nothing survives QoE-feasibly.  JOIN churn always runs
+                # the full search — surviving candidates place no work
+                # on the new device, so only a fresh DP can reclaim its
+                # capacity, and the old plan keeps serving meanwhile.
+                result = planner.replan(self.report.workload, self.plans,
+                                        mapping=trans)
+            else:
+                result = planner.plan(self.report.workload)
+        except (ValueError, RuntimeError):
+            # survivors disconnect the routed topology (Topology.subset)
+            # or admit no plan at all: go QoE-infeasible for this
+            # segment instead of crashing. ``plan_fleet`` keeps the old
+            # indexing so a later rejoin replans from it and recovers.
+            self.active = keep
+            self.state = merged
+            self.degraded = True
+            return self.current, "degraded", time.perf_counter() - t0
         adapter = planner.make_adapter(result)
         new = result.best
         cond = RuntimeState(
@@ -612,6 +643,8 @@ class ServeSession:
         new.meta["warm_replan"] = result.warm_start
         self.adapter = adapter
         self.active = keep
+        self.plan_fleet = keep
+        self.degraded = False
         self.state = merged
         self.plans = list(result.candidates)
         self.current = new
@@ -620,7 +653,11 @@ class ServeSession:
     @property
     def meets_qoe(self) -> bool:
         """Full QoE verdict for the active plan: latency target AND
-        energy/memory budgets (``QoESpec.satisfied``)."""
+        energy/memory budgets (``QoESpec.satisfied``). A degraded
+        session (no servable plan for the surviving fleet) never
+        meets QoE."""
+        if self.degraded:
+            return False
         return self.report.qoe.satisfied(self.current)
 
 

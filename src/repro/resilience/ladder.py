@@ -1,0 +1,211 @@
+"""Degraded-plan fallback ladder: precomputed recovery per loss scope.
+
+Naive replan-on-detect pays the full planner latency *plus* a cold
+weight load on the critical path — the crashed pipeline cannot serve
+while the replacement is prepared.  The ladder instead precomputes, at
+arm time (and again in the background after every adoption), one
+QoE-ranked fallback plan per likely failure scope — each surviving
+subset from a single-device loss — so detection switches instantly:
+the fallback's weights are prestaged on the survivors, and the only
+stall is the pipeline drain.
+
+``FallbackLadder`` serves a single :class:`~repro.dora.ServeSession`;
+``FleetLadder`` precomputes whole fleet assignments for a
+:class:`~repro.fleet.session.FleetSession`.  A scope with no
+QoE-feasible fallback is recorded as infeasible — the engine then
+degrades gracefully (brownout: shed batch admissions, keep
+interactive) instead of raising.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+from ..core.adapter import RuntimeState
+from ..core.planner import DoraPlanner
+
+
+@dataclasses.dataclass
+class LadderEntry:
+    """One precomputed fallback: the best plan on ``keep`` after losing
+    ``lost``. ``result is None`` marks an infeasible scope (survivors
+    disconnect, or nothing plannable); ``qoe_ok`` is the QoE verdict of
+    the fallback (False → adopt it but report brownout pressure)."""
+
+    lost: FrozenSet[int]
+    keep: Tuple[int, ...]
+    mapping: Dict[int, int] = dataclasses.field(default_factory=dict)
+    planner: Optional[DoraPlanner] = None
+    result: Optional[object] = None
+    qoe_ok: bool = False
+
+    @property
+    def feasible(self) -> bool:
+        return self.result is not None
+
+
+class FallbackLadder:
+    """Per-scope fallback plans for one ``ServeSession``."""
+
+    def __init__(self, session):
+        self.session = session
+        self.entries: Dict[FrozenSet[int], LadderEntry] = {}
+        self.build()
+
+    def build(self) -> None:
+        """(Re)compute one fallback per single-device loss from the
+        session's current fleet — the warm background replan that runs
+        after every adoption."""
+        self.entries = {}
+        session = self.session
+        if session.degraded or len(session.active) <= 1:
+            return
+        for d in session.active:
+            lost = frozenset({d})
+            keep = tuple(x for x in session.active if x != d)
+            self.entries[lost] = self._build_entry(lost, keep)
+
+    def _build_entry(self, lost: FrozenSet[int],
+                     keep: Tuple[int, ...]) -> LadderEntry:
+        session = self.session
+        report = session.report
+        try:
+            sub, mapping = report.topology.subset(keep)
+            planner = DoraPlanner(
+                report.graph, sub, report.qoe,
+                partitioner_config=session.partitioner_config,
+                scheduler_config=session.scheduler_config,
+                adapter_config=session.adapter.config)
+            trans = {pos: mapping[orig]
+                     for pos, orig in enumerate(session.plan_fleet)
+                     if orig in mapping}
+            result = planner.replan(report.workload, session.plans,
+                                    mapping=trans)
+        except (ValueError, RuntimeError):
+            # survivors disconnect the routed topology or admit no plan:
+            # the scope is infeasible — detection will brown out instead
+            return LadderEntry(lost=lost, keep=keep)
+        return LadderEntry(lost=lost, keep=keep, mapping=mapping,
+                           planner=planner, result=result,
+                           qoe_ok=report.qoe.satisfied(result.best))
+
+    def lookup(self, lost) -> Optional[LadderEntry]:
+        return self.entries.get(frozenset(lost))
+
+    def apply(self, lost) -> Optional[float]:
+        """Switch the session to the precomputed fallback for ``lost``.
+
+        Returns the stall (drain only — fallback weights are
+        prestaged), or ``None`` when no feasible entry exists for this
+        exact scope (caller falls back to naive replan / brownout).
+        Mirrors ``ServeSession._on_churn``'s bookkeeping.
+        """
+        entry = self.lookup(lost)
+        if entry is None or entry.result is None:
+            return None
+        session = self.session
+        adapter = entry.planner.make_adapter(entry.result)
+        new = entry.result.best
+        merged = session.state
+        cond = RuntimeState(
+            compute_speed={entry.mapping[d]: v
+                           for d, v in merged.compute_speed.items()
+                           if d in entry.mapping},
+            bandwidth_scale={k: v for k, v in merged.bandwidth_scale.items()
+                             if k in entry.planner.topo.resources})
+        if cond.compute_speed or cond.bandwidth_scale:
+            new = adapter.scheduler.refine(
+                new, compute_speed=dict(cond.compute_speed),
+                bandwidth_scale=dict(cond.bandwidth_scale))
+        stall = adapter.config.switch_drain_s
+        new.meta["switch_stall_s"] = stall
+        new.meta["fleet"] = list(entry.keep)
+        new.meta["fallback"] = True
+        session.adapter = adapter
+        session.active = entry.keep
+        session.plan_fleet = entry.keep
+        session.degraded = False
+        session.plans = list(entry.result.candidates)
+        session.current = new
+        return stall
+
+
+class FleetLadder:
+    """Per-scope fallback fleet assignments for one ``FleetSession``."""
+
+    def __init__(self, session):
+        self.session = session
+        self.entries: Dict[FrozenSet[int], object] = {}
+        self.build()
+
+    def build(self) -> None:
+        self.entries = {}
+        session = self.session
+        n_tenants = len(session.planner.tenants)
+        for d in session.active:
+            fleet = sorted(set(session.active) - {d})
+            if len(fleet) < n_tenants:
+                continue        # infeasible scope: not enough devices
+            warm = {name: (list(sess.plans),
+                           session.plan.tenants[name].allotment)
+                    for name, sess in session.sessions.items()}
+            merged = session.state
+            conditions = merged if (merged.compute_speed
+                                    or merged.bandwidth_scale) else None
+            try:
+                self.entries[frozenset({d})] = session.planner.plan(
+                    devices=fleet, warm=warm, conditions=conditions)
+            except (ValueError, RuntimeError):
+                continue        # no feasible assignment without d
+
+    def lookup(self, lost):
+        return self.entries.get(frozenset(lost))
+
+    def apply(self, lost) -> Optional[list]:
+        """Adopt the precomputed fleet plan for ``lost``: mirrors
+        ``FleetSession._rebalance`` adoption, but every moved tenant
+        pays only the drain (fallback weights are prestaged).  Returns
+        the tenant actions, or ``None`` when no entry covers the scope.
+        """
+        from ..fleet.session import TenantAction, _orig_placement
+
+        new_plan = self.lookup(lost)
+        if new_plan is None:
+            return None
+        session = self.session
+        old_plan = session.plan
+        shares_of = session.planner.link_shares
+        old_shares = shares_of(list(old_plan.assignments.values()))
+        new_shares = shares_of(list(new_plan.assignments.values()))
+        actions: List[TenantAction] = []
+        new_sessions = {}
+        for name, tp in new_plan.tenants.items():
+            old_tp = old_plan.tenants.get(name)
+            if (old_tp is not None and old_tp.allotment == tp.allotment
+                    and session.planner._factors_key(tp.allotment, old_shares)
+                    == session.planner._factors_key(tp.allotment,
+                                                    new_shares)):
+                new_sessions[name] = session.sessions[name]
+                continue
+            sess = session._arm_tenant(
+                tp, state=session._local_state(tp, session.state))
+            stall = 0.0
+            if old_tp is not None:
+                old_current = session.sessions[name].current
+                if (_orig_placement(old_current, old_tp)
+                        != _orig_placement(sess.current, tp)):
+                    # prestaged: drain only, no weight load
+                    stall = sess.adapter.config.switch_drain_s
+            sess.current.meta["switch_stall_s"] = stall
+            sess.current.meta["fleet"] = list(tp.allotment)
+            sess.current.meta["fallback"] = True
+            new_sessions[name] = sess
+            actions.append(TenantAction(
+                tenant=name, action="fallback", react_s=0.0, stall_s=stall,
+                latency_after=sess.current.latency, allotment=tp.allotment))
+        session.plan = new_plan
+        session.sessions = new_sessions
+        session.active = tuple(sorted(
+            set(session.active) - frozenset(lost)))
+        session.rebalances += 1
+        return actions

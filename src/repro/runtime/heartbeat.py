@@ -12,6 +12,7 @@ virtual clock; a real deployment would pump it from RPC callbacks).
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable, Dict, List, Optional
 
 from ..core.adapter import DynamicsEvent
@@ -42,12 +43,42 @@ class Coordinator:
         self.coordinator_id = min(device_ids)
         self.log: List[str] = []
 
+    # -- election -----------------------------------------------------------------
+    def _elect(self, t: float) -> None:
+        """Maintain the docstring's invariant: the coordinator is always
+        the lowest *healthy* id (a revived lower id reclaims the role; a
+        dead coordinator is replaced even when every device failed in
+        the same tick and one later returns)."""
+        healthy = [d for d, s in self.devices.items() if s.alive]
+        if healthy and self.coordinator_id != min(healthy):
+            self.coordinator_id = min(healthy)
+            self.log.append(f"t={t:.1f} coordinator -> {self.coordinator_id}")
+
+    def _notify_failure(self, failed: List[int]) -> None:
+        """Call ``on_failure`` with the new coordinator exposed: two-arg
+        callbacks receive ``(failed, coordinator_id)``; legacy one-arg
+        callbacks (e.g. ``ElasticController._on_failure``) keep working.
+        """
+        if self.on_failure is None:
+            return
+        try:
+            n_params = len(inspect.signature(self.on_failure).parameters)
+        except (TypeError, ValueError):
+            n_params = 1
+        if n_params >= 2:
+            self.on_failure(failed, self.coordinator_id)
+        else:
+            self.on_failure(failed)
+
     # -- heartbeat ingestion ------------------------------------------------------
     def beat(self, device_id: int, t: float, *, speed: float = 1.0,
              bandwidth: float = 1.0) -> None:
         st = self.devices[device_id]
         prev_speed, prev_bw = st.speed, st.bandwidth
+        revived = not st.alive
         st.last_beat, st.speed, st.bandwidth, st.alive = t, speed, bandwidth, True
+        if revived:
+            self._elect(t)
         mag = max(abs(speed - prev_speed), abs(bandwidth - prev_bw))
         if mag == 0.0:
             return
@@ -72,13 +103,8 @@ class Coordinator:
                 failed.append(st.device_id)
         if failed:
             self.log.append(f"t={t:.1f} failed={failed}")
-            if self.coordinator_id in failed:     # re-election
-                healthy = [d for d, s in self.devices.items() if s.alive]
-                if healthy:
-                    self.coordinator_id = min(healthy)
-                    self.log.append(f"t={t:.1f} coordinator -> {self.coordinator_id}")
-            if self.on_failure:
-                self.on_failure(failed)
+            self._elect(t)                        # re-election before notify
+            self._notify_failure(failed)
         return failed
 
     @property

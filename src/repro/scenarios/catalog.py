@@ -289,3 +289,11 @@ register_generated(
     description="Generated degraded mesh: four boards on a partial 5G "
                 "mesh with a thermal throttle and repeated bandwidth "
                 "dips (lossy_mesh family, seed 24).")
+
+register_generated(
+    "faulty_sites", seed=16, name="faulty_sites",
+    description="Generated chaos site: seven devices on a partial "
+                "wifi mesh whose timeline carries unannounced "
+                "crash-stops, a link flap and a silent straggler — "
+                "request-mode simulation routes through the "
+                "resilience engine (faulty_sites family, seed 16).")

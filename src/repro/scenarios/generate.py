@@ -30,6 +30,9 @@ Built-in families:
                           *time-varying* link quality (DistrEdge-style)
 ``lossy_mesh``            degraded partial meshes: low-bandwidth, high-latency
                           links that keep dropping further (DEFER-style)
+``faulty_sites``          chaos archetype: edge sites under *unannounced*
+                          failures — crash-stop devices, link flaps and
+                          silent stragglers (see :mod:`repro.resilience`)
 ``mixed_train_serve``     fleet family: a fine-tuning tenant co-deployed with
                           serving tenants (see :func:`generate_fleet`)
 ========================  ====================================================
@@ -222,6 +225,22 @@ _family(FamilySpec(
 ))
 
 _family(FamilySpec(
+    name="faulty_sites",
+    description="Chaos archetype: heterogeneous edge sites whose "
+                "devices crash-stop silently, links flap and "
+                "stragglers slow down without announcing it — the "
+                "resilience layer's native habitat.",
+    topologies=("star", "mesh", "ring"),
+    techs=("wifi", "5g", "ethernet"),
+    device_classes=("board", "dgpu", "server"),
+    n_devices=(3, 7), modes=("serve",),
+    models=("bert", "tiny_lm_8", "tiny_lm_4"),
+    qoe_slack=(2.0, 8.0),
+    dynamics=("crash", "link_flap", "straggler", "bw_dip"),
+    max_events=4,
+))
+
+_family(FamilySpec(
     name="lossy_mesh",
     description="Degraded partial meshes: low-bandwidth high-latency "
                 "links that keep losing capacity; traffic reroutes "
@@ -273,7 +292,9 @@ class ScenarioParams:
     request_rate: float
     events: Tuple[Tuple[str, float, str, float], ...]
     # ^ (kind, t, target, value): kind in bw_dip/throttle/churn_leave/
-    #   churn_join/mobility; target is a resource name or device index
+    #   churn_join/mobility plus the unannounced fault kinds
+    #   crash/link_down/link_up/straggler; target is a resource name
+    #   or device index
 
     @property
     def name(self) -> str:
@@ -340,6 +361,19 @@ class ScenarioParams:
             elif kind == "churn_join":
                 label = f"churn: device {target} rejoins"
                 ev = DynamicsEvent(t=t, join=(int(target),))
+            elif kind == "crash":
+                label = f"crash: device {target}"
+                ev = DynamicsEvent(t=t, crash=(int(target),))
+            elif kind == "link_down":
+                label = f"link down: {target}"
+                ev = DynamicsEvent(t=t, link_down=(target,))
+            elif kind == "link_up":
+                label = f"link up: {target}"
+                ev = DynamicsEvent(t=t, link_up=(target,))
+            elif kind == "straggler":
+                label = (f"straggler: device {target} -> "
+                         f"x{format(value, '.3g')}")
+                ev = DynamicsEvent(t=t, straggler={int(target): value})
             else:
                 raise ValueError(f"unknown event kind {kind!r}")
             out.append((label, ev))
@@ -534,7 +568,7 @@ def sample_params(family: str, seed: int) -> ScenarioParams:
     for _ in range(n_events):
         t = round(t + rng.uniform(10.0, 60.0), 3)
         kinds = [k for k in spec.dynamics
-                 if k != "churn" or churnable]
+                 if k not in ("churn", "crash") or churnable]
         if not kinds:
             break
         kind = rng.choice(kinds)
@@ -560,6 +594,24 @@ def sample_params(family: str, seed: int) -> ScenarioParams:
             events.append(("churn_leave", t, str(d), 0.0))
             t = round(t + rng.uniform(30.0, 120.0), 3)
             events.append(("churn_join", t, str(d), 1.0))
+        elif kind == "crash":
+            # unannounced crash-stop; the repair IS announced (the
+            # rebooted device re-registers via ordinary join churn)
+            d = rng.choice(churnable)
+            events.append(("crash", t, str(d), 0.0))
+            t = round(t + rng.uniform(30.0, 120.0), 3)
+            events.append(("churn_join", t, str(d), 1.0))
+        elif kind == "link_flap":
+            res = rng.choice(resources)
+            events.append(("link_down", t, res, 0.0))
+            t = round(t + rng.uniform(15.0, 60.0), 3)
+            events.append(("link_up", t, res, 1.0))
+        elif kind == "straggler":
+            d = rng.randrange(n)
+            events.append(("straggler", t, str(d),
+                           round(rng.uniform(0.2, 0.6), 4)))
+            t = round(t + rng.uniform(20.0, 90.0), 3)
+            events.append(("straggler", t, str(d), 1.0))
     events.sort(key=lambda e: e[1])
 
     return ScenarioParams(

@@ -75,6 +75,12 @@ class FleetTrace:
     #: idle-draw proration was computed from
     ownership: List[Tuple[float, Dict[str, Tuple[int, ...]]]] = \
         dataclasses.field(default_factory=list)
+    #: chaos-engine fault records (kind, target, onset/detect/restore
+    #: times, mttr_s) — empty for fault-free runs
+    faults: List[Dict[str, object]] = dataclasses.field(default_factory=list)
+    #: mean time-to-recovery over service-affecting faults, ``None``
+    #: when no fault touched any tenant
+    mttr_s: Optional[float] = None
 
     @property
     def energy(self) -> float:
@@ -90,6 +96,15 @@ class FleetTrace:
     @property
     def n_failed(self) -> int:
         return sum(t.n_failed for t in self.tenants.values())
+
+    @property
+    def n_retried(self) -> int:
+        return sum(t.n_retried for t in self.tenants.values())
+
+    @property
+    def failed_rate(self) -> float:
+        n = sum(len(t.requests) for t in self.tenants.values())
+        return self.n_failed / n if n else 0.0
 
     def utilization(self, device: int) -> float:
         if self.horizon_s <= 0.0:
@@ -122,6 +137,12 @@ class FleetTrace:
             "per_device_utilization": {str(d): self.utilization(d) for d in
                                        sorted(self.per_device_energy)},
             "oversubscribed_devices": self.oversubscribed_devices,
+            **({"retried_requests": self.n_retried,
+                "mttr_s": _json_num(self.mttr_s),
+                "faults": [{k: _json_num(v) if isinstance(v, float) else v
+                            for k, v in rec.items()}
+                           for rec in self.faults]}
+               if self.faults or self.mttr_s is not None else {}),
             "tenants": {name: t.to_dict()
                         for name, t in self.tenants.items()},
             "actions": [{
@@ -165,6 +186,9 @@ def simulate_fleet(fleet, *,
                    span_s: Optional[float] = None,
                    seed: int = 0,
                    chunk: Optional[int] = None,
+                   faults=None,
+                   resilience=None,
+                   recovery: str = "ladder",
                    **overrides) -> FleetTrace:
     """Run one multi-tenant request-level serving simulation.
 
@@ -178,6 +202,12 @@ def simulate_fleet(fleet, *,
     ``chunk`` bounds the kernel's vectorization width (a validation
     knob — results are invariant to it); keyword ``overrides``
     otherwise flow to ``dora.serve_fleet``.
+
+    ``faults=`` / ``resilience=`` / ``recovery=`` mirror
+    :func:`repro.sim.serving.simulate_requests`: any fault content
+    (a :class:`~repro.resilience.FaultScript` or fault-carrying
+    timeline events) delegates the run to the multi-tenant chaos
+    engine with detection-latency-aware recovery.
     """
     from .. import dora            # local import: dora lazily imports sims
     from ..fleet import resolve_fleet
@@ -215,6 +245,19 @@ def simulate_fleet(fleet, *,
                 arrival=getattr(tn, "arrival", None),
                 classes=tuple(getattr(tn, "request_classes", ()) or ()))
         tenant_loads[tn.name] = load
+
+    if faults is not None and hasattr(faults, "events"):
+        faults = faults.events()
+    if faults:
+        timeline = sorted(timeline + kernel.normalize_timeline(faults),
+                          key=lambda item: item[1].t)
+    if resilience is not None or any(ev.is_fault for _, ev in timeline):
+        from ..resilience import ResilienceConfig
+        from ..resilience.engine import run_chaos_fleet
+        return run_chaos_fleet(fs=fs, session=session, loads=tenant_loads,
+                               timeline=timeline,
+                               config=resilience or ResilienceConfig(),
+                               recovery=recovery)
 
     def freeze(name: str) -> kernel.ActivePlan:
         tp = session.plan.tenants[name]

@@ -84,6 +84,9 @@ def simulate_requests(scenario,
                       report=None,
                       arrivals: Optional[Sequence[float]] = None,
                       chunk: Optional[int] = None,
+                      faults=None,
+                      resilience=None,
+                      recovery: str = "ladder",
                       **overrides) -> ServingTrace:
     """Run one request-level serving simulation.
 
@@ -99,6 +102,22 @@ def simulate_requests(scenario,
     process.  ``chunk`` bounds the kernel's vectorization width (a
     validation knob — results are invariant to it).  Keyword
     ``overrides`` flow to ``dora.serve``/``dora.plan``.
+
+    **Chaos.** ``faults=`` injects *unannounced* failures — a
+    :class:`~repro.resilience.FaultScript`, or any event sequence
+    carrying ``crash``/``link_down``/``link_up``/``straggler`` fields
+    (the ``faulty_sites`` scenario family registers such timelines).
+    Whenever fault content is present (or ``resilience=`` is passed),
+    the run is delegated to the chaos engine
+    (:mod:`repro.resilience.engine`): failures take effect silently at
+    onset and are only *acted on* one heartbeat detection window later
+    (``miss_limit * beat_interval``, pumped through a real
+    ``runtime.heartbeat.Coordinator``); blind-window requests fail or
+    time out and are retried per the :class:`RetryPolicy`;
+    ``recovery=`` picks the dora reaction — ``"ladder"`` (precomputed
+    fallback plan, background warm replan) or ``"replan"`` (naive
+    replan-on-detect).  With no fault content this function is
+    bit-identical to the plain Lindley kernel path.
     """
     from .. import dora  # local import: dora lazily imports this module
 
@@ -150,6 +169,20 @@ def simulate_requests(scenario,
     timeline = kernel.normalize_timeline(
         events if events is not None else sc.timeline)
 
+    if faults is not None and hasattr(faults, "events"):
+        faults = faults.events()
+    if faults:
+        timeline = sorted(timeline + kernel.normalize_timeline(faults),
+                          key=lambda item: item[1].t)
+    if resilience is not None or any(ev.is_fault for _, ev in timeline):
+        from ..resilience import ResilienceConfig
+        from ..resilience.engine import run_chaos
+        return run_chaos(sc=sc, strategy=strategy, session=session,
+                         report=report, scheduler=scheduler, load=load,
+                         slo=slo, arr=arr, timeline=timeline,
+                         config=resilience or ResilienceConfig(),
+                         recovery=recovery)
+
     # static-strategy runtime view (the dora path keeps its own inside
     # the ServeSession)
     static_state = RuntimeState()
@@ -168,10 +201,19 @@ def simulate_requests(scenario,
             stall = (float(new.meta.get("switch_stall_s", 0.0))
                      if act == "replan" else 0.0)
             stream.stall(ev.t, stall)
-            stream.plan = kernel.freeze_plan(new, session.active, topo)
+            if act == "degraded":
+                # no servable plan on the survivors: requests fail
+                # until a rejoin replans successfully
+                stream.alive = False
+                lat = math.inf
+            else:
+                stream.alive = True
+                stream.plan = kernel.freeze_plan(new, session.plan_fleet,
+                                                 topo)
+                lat = stream.plan.latency
             actions.append(AdapterAction(t=ev.t, label=label, action=act,
                                          react_s=react, stall_s=stall,
-                                         latency_after=stream.plan.latency))
+                                         latency_after=lat))
             return
         # static baseline: merge conditions, apply churn, reprice
         t0 = time.perf_counter()

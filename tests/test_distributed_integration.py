@@ -29,3 +29,12 @@ def test_elastic_restart_8_to_4_devices():
     res = _run("elastic_check.py")
     assert res.returncode == 0, res.stdout + res.stderr
     assert "ELASTIC_OK" in res.stdout
+
+
+@pytest.mark.slow
+def test_elastic_cascading_failure_8_to_4_to_2():
+    """Two back-to-back remesh cycles: the checkpoint is restored each
+    time and the generation counter stays monotone."""
+    res = _run("elastic_cascade_check.py")
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "CASCADE_OK" in res.stdout
