@@ -1,0 +1,446 @@
+"""Control plane — preemption, battery SoC, and streamed migration.
+
+The control-plane PR unified every dynamics reaction behind
+``repro.control`` and added three mechanisms on top of the vectorized
+serving kernel: stage-level priority preemption (interactive requests
+jump queued batch admissions), battery state-of-charge tracking with
+pre-death evacuation, and DEFER-style streamed migration (next-plan
+weights ship behind the running plan's execution).  This harness
+measures each mechanism against its off arm on catalog scenarios plus
+one multi-tenant fleet and writes ``BENCH_control.json``:
+
+* preemption: interactive p95 / interactive SLO / aggregate SLO under
+  FIFO vs priority preemption on three catalog scenarios and the
+  ``traffic_intersection`` fleet;
+* battery: deaths and dead-battery QoE violations (deaths + post-death
+  SLO misses) with SoC tracked but ignored vs SoC-aware evacuation;
+* migration: total priced replan stall, synchronous vs streamed, on
+  forced device-leave migrations;
+* a ``quick`` section (same sizes — runs are analytic and take
+  seconds) that CI re-measures and gates.
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.fig_control        # full + rewrite JSON
+    BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.fig_control --check
+        # CI gate: re-run the quick subset and fail (exit 1) if any
+        # mechanism stops beating its off arm, or if a headline metric
+        # regressed >BENCH_REGRESSION_FACTOR (default 1.5x) vs. the
+        # committed quick numbers
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .common import Claim, table
+
+from repro import dora
+from repro.control import ControlConfig
+from repro.core.device import Topology
+from repro.core.events import DynamicsEvent, interactive_batch
+from repro.sim.serving import ServingLoad, simulate_requests
+
+BENCH_PATH = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_control.json"))
+SCHEMA = "dora-bench-control/v1"
+
+#: (scenario, rate, n_requests, class seed, interactive slo_s, batch
+#: slo_s, interactive share) — rates sit high enough that a FIFO queue
+#: builds and batch admissions delay interactive arrivals; the
+#: interactive SLO is a small multiple of the best plan's latency so
+#: queueing (not service time) decides it.
+PREEMPT_CASES = (
+    ("hospital_ward", 6.0, 400, 3, 0.5, 10.0, 0.3),
+    ("stadium_gate", 5.5, 400, 3, 0.6, 12.0, 0.3),
+    ("edge_pod_v5e", 1.4, 300, 3, 2.0, 30.0, 0.3),
+)
+FLEET = "traffic_intersection"
+#: The detector tenant carries the interactive/batch mix; the tracker
+#: runs a plain single-class load on its own sub-topology, so the fleet
+#: aggregate (worst tenant) shows preemption helps one tenant without
+#: costing the other.
+FLEET_LOADS = {
+    "detector": ServingLoad(rate=5.5, n_requests=300, seed=3,
+                            classes=interactive_batch(
+                                0.6, 12.0, interactive_share=0.3)),
+    "tracker": ServingLoad(rate=2.0, n_requests=120, seed=4),
+}
+
+#: (scenario, rate, n_requests, arrival seed) — ``battery_constrained``
+#: carries generated batteries of its own; the other cases get the
+#: hottest device's battery self-calibrated from a dry run so it dies
+#: mid-horizon (see ``_calibrated_topology``).
+BATTERY_CASES = (
+    ("battery_constrained", None, None, None),
+    ("hospital_ward", 5.0, 200, 2),
+    ("smart_home_1", 4.0, 150, 2),
+)
+#: Calibrated battery capacity as a fraction of the dry run's drain on
+#: the hottest device — 0.5 puts the death squarely mid-horizon.
+CAP_FRAC = 0.5
+
+#: (scenario, device leaving, leave time, rate, n_requests) — cases
+#: whose best plan spans several devices on a slow shared medium, so
+#: the forced migration pays a real weight reload that a streamed
+#: switch can hide behind ongoing execution.  Async prefetch is
+#: disabled on both arms: it would hide the reload entirely and
+#: measure nothing.
+MIGRATION_CASES = (
+    ("smart_home_1", 1, 8.0, 4.0, 150),
+    ("smart_home_2", 3, 10.0, 2.0, 80),
+    ("edge_cluster", 1, 5.0, 1.0, 60),
+)
+
+
+def _quick() -> bool:
+    return bool(os.environ.get("BENCH_QUICK"))
+
+
+def _commit() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, cwd=os.path.dirname(BENCH_PATH)).stdout.strip()
+    except OSError:
+        return "unknown"
+
+
+# -- preemption --------------------------------------------------------------
+def _class_metrics(tr) -> Dict[str, object]:
+    cm = tr.class_metrics()["interactive"]
+    return {
+        "interactive_p95": round(cm["p95"], 6),
+        "interactive_slo": round(cm["slo_attainment"], 6),
+        "aggregate_slo": round(tr.slo_attainment, 6),
+    }
+
+
+def bench_preempt_case(name: str, rate: float, n: int, seed: int,
+                       islo: float, bslo: float,
+                       share: float) -> Dict[str, object]:
+    load = ServingLoad(rate=rate, n_requests=n, seed=seed,
+                       classes=interactive_batch(islo, bslo,
+                                                 interactive_share=share))
+    session = dora.serve(name)
+    case: Dict[str, object] = {
+        "rate_rps": rate, "n_requests": n,
+        "interactive_slo_s": islo, "batch_slo_s": bslo,
+        "interactive_share": share,
+    }
+    for arm, pre in (("fifo", False), ("preempt", True)):
+        tr = dora.simulate(name, mode="requests", session=session,
+                           copy=True, load=load,
+                           control=ControlConfig(preemption=pre))
+        case[arm] = _class_metrics(tr)
+    return case
+
+
+def bench_preempt_fleet() -> Dict[str, object]:
+    case: Dict[str, object] = {
+        "n_requests_per_tenant": {n: ld.n_requests
+                                  for n, ld in FLEET_LOADS.items()},
+    }
+    for arm, pre in (("fifo", False), ("preempt", True)):
+        session = dora.serve_fleet(FLEET)
+        tr = dora.simulate(FLEET, mode="fleet", session=session,
+                           loads=dict(FLEET_LOADS),
+                           control=ControlConfig(preemption=pre))
+        det = tr.tenants["detector"]
+        m = _class_metrics(det)
+        m["aggregate_slo"] = round(tr.slo_attainment, 6)   # worst tenant
+        case[arm] = m
+    return case
+
+
+def _preempt_wins(case: Dict[str, object]) -> bool:
+    fifo, pre = case["fifo"], case["preempt"]
+    return (pre["interactive_p95"] < fifo["interactive_p95"]
+            and pre["interactive_slo"] >= fifo["interactive_slo"]
+            and pre["aggregate_slo"] >= fifo["aggregate_slo"])
+
+
+# -- battery SoC -------------------------------------------------------------
+def _calibrated_topology(name: str, load: ServingLoad) -> Topology:
+    """Give the dry run's hottest device a battery sized to die
+    mid-horizon (capacity = CAP_FRAC x its fault-free drain)."""
+    dry = simulate_requests(name, load=load)
+    pe = dry.per_device_energy
+    hot = max(pe, key=pe.get)
+    topo = dora.serve(name).report.topology
+    devs = list(topo.devices)
+    devs[hot] = dataclasses.replace(devs[hot],
+                                    battery_j=CAP_FRAC * pe[hot])
+    return Topology(devs, list(topo.resources.values()), topo._p2p)
+
+
+def _battery_metrics(tr) -> Dict[str, object]:
+    deaths = [a.t for a in tr.actions
+              if a.label.startswith("battery dead")]
+    evacs = sum(1 for a in tr.actions
+                if a.label.startswith("battery low"))
+    misses = 0
+    if deaths:
+        arr, fin = tr.requests.arrival, tr.requests.finish
+        late = arr >= min(deaths)
+        misses = int(np.count_nonzero(late & ((fin - arr) > tr.slo_s)))
+    return {
+        "deaths": len(deaths),
+        "evacuations": evacs,
+        # the QoE damage the aware arm exists to avoid: every death
+        # plus every SLO miss among requests arriving at/after the
+        # first one
+        "dead_battery_violations": len(deaths) + misses,
+        "aggregate_slo": round(tr.slo_attainment, 6),
+        "energy_j": round(tr.energy, 2),
+    }
+
+
+def bench_battery_case(name: str, rate: Optional[float], n: Optional[int],
+                       seed: Optional[int]) -> Dict[str, object]:
+    kw: Dict[str, object] = {}
+    case: Dict[str, object] = {"batteries": "generated"}
+    if rate is not None:
+        load = ServingLoad(rate=rate, n_requests=n, seed=seed)
+        kw = {"load": load, "topology": _calibrated_topology(name, load)}
+        case = {"batteries": f"calibrated ({CAP_FRAC:g}x dry-run drain)",
+                "rate_rps": rate, "n_requests": n}
+    for arm, aware in (("ignore", False), ("aware", True)):
+        tr = simulate_requests(
+            name, control=ControlConfig(battery=True, battery_aware=aware),
+            **kw)
+        case[arm] = _battery_metrics(tr)
+    return case
+
+
+def _battery_wins(case: Dict[str, object]) -> bool:
+    return (case["aware"]["dead_battery_violations"]
+            < case["ignore"]["dead_battery_violations"])
+
+
+# -- streamed migration ------------------------------------------------------
+def bench_migration_case(name: str, dev: int, t: float, rate: float,
+                         n: int) -> Dict[str, object]:
+    load = ServingLoad(rate=rate, n_requests=n, seed=2)
+    case: Dict[str, object] = {"leave_device": dev, "leave_t_s": t,
+                               "rate_rps": rate, "n_requests": n}
+    for arm, streamed in (("sync", False), ("streamed", True)):
+        cc = ControlConfig(streamed_migration=True) if streamed else None
+        session = dora.serve(name, control=cc)
+        session.adapter.config.async_switching = False
+        tr = simulate_requests(
+            name, load=load, session=session,
+            events=[("leave", DynamicsEvent(t=t, leave=(dev,)))])
+        case[arm] = {
+            "replan_stall_s": round(sum(a.stall_s for a in tr.actions
+                                        if a.action == "replan"), 6),
+            "aggregate_slo": round(tr.slo_attainment, 6),
+        }
+    return case
+
+
+def _migration_wins(case: Dict[str, object]) -> bool:
+    return (case["streamed"]["replan_stall_s"]
+            < case["sync"]["replan_stall_s"])
+
+
+# -- assembly ----------------------------------------------------------------
+def bench_control(quick: bool = False) -> Dict[str, object]:
+    # control runs are analytic and finish in seconds, so the quick
+    # (CI) subset measures the exact same cases at the same sizes —
+    # the two sections differ only in when they were measured
+    preempt = {name: bench_preempt_case(name, *rest)
+               for name, *rest in PREEMPT_CASES}
+    preempt[FLEET] = bench_preempt_fleet()
+    return {
+        "commit": _commit(), "quick": quick,
+        "preemption": preempt,
+        "battery": {name: bench_battery_case(name, *rest)
+                    for name, *rest in BATTERY_CASES},
+        "migration": {name: bench_migration_case(name, *rest)
+                      for name, *rest in MIGRATION_CASES},
+    }
+
+
+def write_bench(current: Dict[str, object],
+                path: str = BENCH_PATH) -> Dict[str, object]:
+    doc: Dict[str, object] = {"schema": SCHEMA}
+    if os.path.exists(path):
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    doc["schema"] = SCHEMA
+    doc["method"] = (
+        "three mechanism-vs-off-arm comparisons on identical arrivals: "
+        "priority preemption (interactive_batch class mix, FIFO vs "
+        f"ControlConfig(preemption=True), incl. the {FLEET} fleet), "
+        "battery SoC (generated or dry-run-calibrated batteries, SoC "
+        "tracked-but-ignored vs battery_aware evacuation; violations = "
+        "deaths + post-death SLO misses), and streamed migration "
+        "(forced device-leave, synchronous vs DEFER-style streamed "
+        "switch pricing, async prefetch off on both arms)")
+    doc["current"] = current
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return doc
+
+
+def refresh_quick(path: str = BENCH_PATH) -> Dict[str, object]:
+    doc: Dict[str, object] = {"schema": SCHEMA}
+    if os.path.exists(path):
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    doc["quick"] = bench_control(quick=True)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return doc
+
+
+def check_regression(path: str = BENCH_PATH) -> int:
+    """CI gate on the three control-plane claims.
+
+    Re-measures the quick subset and fails when any mechanism stops
+    beating its off arm, or when a headline metric (interactive p95
+    under preemption, aware-arm violations, streamed stall) regresses
+    more than ``BENCH_REGRESSION_FACTOR`` (default 1.5x, plus a small
+    absolute slack) against the committed ``quick`` section."""
+    factor = float(os.environ.get("BENCH_REGRESSION_FACTOR", "1.5"))
+    with open(path, encoding="utf-8") as f:
+        committed = json.load(f)
+    ref = committed.get("quick")
+    cur = bench_control(quick=True)
+    committed["quick"] = cur
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(committed, f, indent=1)
+        f.write("\n")
+    if ref is None:
+        print("no committed quick section; recorded one")
+        return 0
+    bad: List[str] = []
+    gates = (
+        ("preemption", _preempt_wins, "preempt", "interactive_p95", 0.05,
+         "preemption no longer improves interactive QoE without hurting "
+         "aggregate attainment"),
+        ("battery", _battery_wins, "aware", "dead_battery_violations", 1.0,
+         "SoC-aware evacuation no longer reduces dead-battery "
+         "violations"),
+        ("migration", _migration_wins, "streamed", "replan_stall_s", 0.1,
+         "streamed migration no longer reduces the priced switch "
+         "stall"),
+    )
+    for group, wins, arm, metric, slack, msg in gates:
+        for name, case in cur[group].items():
+            if not wins(case):
+                bad.append(f"{group}/{name}: {msg} ({case})")
+            refc = ref.get(group, {}).get(name)
+            if refc is None:
+                continue
+            was, now = refc[arm].get(metric), case[arm].get(metric)
+            if was is not None and now is not None \
+                    and now > was * factor + slack:
+                bad.append(f"{group}/{name}: {arm} {metric} regressed "
+                           f"{was:.4f} -> {now:.4f} "
+                           f"(gate {factor:.2f}x + {slack})")
+            print(f"{group}/{name}: {arm} {metric} = {now} "
+                  f"(committed {was})")
+    if bad:
+        for line in bad:
+            print(f"FAIL: {line}")
+        return 1
+    print("control benchmark regression gate: OK")
+    return 0
+
+
+# -- the benchmark-harness entry point -------------------------------------------
+def run(report) -> None:
+    quick = _quick()
+    if quick:
+        doc = refresh_quick()
+        cur = doc["quick"]
+    else:
+        doc = write_bench(bench_control(quick=False))
+        cur = doc["current"]
+
+    rows = []
+    for name, case in cur["preemption"].items():
+        for arm in ("fifo", "preempt"):
+            m = case[arm]
+            rows.append([name, arm, f"{m['interactive_p95']:.3f}",
+                         f"{m['interactive_slo']:.3f}",
+                         f"{m['aggregate_slo']:.3f}"])
+    report.add_table(table(
+        ["case", "arm", "inter. p95 (s)", "inter. SLO", "agg. SLO"],
+        rows, "Priority preemption vs FIFO (BENCH_control.json)"))
+
+    rows = []
+    for name, case in cur["battery"].items():
+        for arm in ("ignore", "aware"):
+            m = case[arm]
+            rows.append([name, arm, str(m["deaths"]),
+                         str(m["evacuations"]),
+                         str(m["dead_battery_violations"]),
+                         f"{m['aggregate_slo']:.3f}"])
+    report.add_table(table(
+        ["case", "arm", "deaths", "evac.", "violations", "agg. SLO"],
+        rows, "Battery SoC: tracked-but-ignored vs aware evacuation"))
+
+    rows = []
+    for name, case in cur["migration"].items():
+        for arm in ("sync", "streamed"):
+            m = case[arm]
+            rows.append([name, arm, f"{m['replan_stall_s']:.3f}",
+                         f"{m['aggregate_slo']:.3f}"])
+    report.add_table(table(
+        ["case", "arm", "replan stall (s)", "agg. SLO"],
+        rows, "Migration: synchronous vs streamed switch"))
+
+    checks = (
+        ("BENCH: priority preemption improves interactive p95 and SLO "
+         "without dropping aggregate attainment below FIFO on every "
+         "case", "preemption", _preempt_wins),
+        ("BENCH: SoC-aware evacuation strictly reduces dead-battery "
+         "QoE violations on every battery case", "battery",
+         _battery_wins),
+        ("BENCH: streamed migration strictly reduces the priced switch "
+         "stall on every migration case", "migration", _migration_wins),
+    )
+    claims = []
+    for text, group, wins in checks:
+        ok = {name: wins(case) for name, case in cur[group].items()}
+        c = Claim(text)
+        c.check(all(ok.values()),
+                ", ".join(f"{n}:{'win' if w else 'LOSS'}"
+                          for n, w in ok.items()))
+        claims.append(c)
+    report.add_claims(claims)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--check" in argv:
+        return check_regression()
+    if _quick():
+        refresh_quick()
+        print(f"refreshed quick section of {BENCH_PATH}")
+        return 0
+    doc = write_bench(bench_control(quick=False))
+    for group in ("preemption", "battery", "migration"):
+        for name, case in doc["current"][group].items():
+            arms = [k for k in case
+                    if isinstance(case[k], dict)
+                    and k not in ("n_requests_per_tenant",)]
+            print(f"{group}/{name}: "
+                  + "; ".join(f"{a}={case[a]}" for a in arms))
+    print(f"wrote {BENCH_PATH}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,6 +33,7 @@ HARNESSES = [
     "fig_serving_scale",
     "fig_fidelity",
     "fig_chaos",
+    "fig_control",
     "roofline",
 ]
 

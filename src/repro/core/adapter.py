@@ -131,6 +131,15 @@ class AdapterConfig:
     switch_drain_s: float = 2.0             # pipeline drain on plan switch
     async_switching: bool = True
     delta_switching: bool = True
+    #: DEFER-style streamed migration: on the *synchronous* switch path
+    #: (async prefetch off — e.g. recovery from a dead pipeline is
+    #: priced sync), overlap the next plan's weight transfer with the
+    #: current plan's remaining execution so the priced stall drops from
+    #: the full reload toward the exposed (non-overlapped) remainder
+    streamed_migration: bool = False
+    #: fraction of the migration link's bandwidth the stream may steal
+    #: from serving traffic while overlapping
+    stream_bw_fraction: float = 0.5
 
 
 def _plan_tiebreak(p: ParallelismPlan) -> tuple:
@@ -189,10 +198,18 @@ class RuntimeAdapter:
         self.scheduler = scheduler
         self.config = config or AdapterConfig()
 
-    # -- switching cost (§4.3 async + delta) -------------------------------------
+    # -- switching cost (§4.3 async + delta + DEFER streaming) -------------------
     def switch_cost(self, old: Optional[ParallelismPlan],
-                    new: ParallelismPlan) -> float:
-        """Seconds of *service stall* incurred by switching old→new."""
+                    new: ParallelismPlan,
+                    overlap_s: Optional[float] = None) -> float:
+        """Seconds of *service stall* incurred by switching old→new.
+
+        ``overlap_s`` is the execution span still ahead of the current
+        plan that a streamed migration may overlap with (defaults to
+        one iteration, ``old.latency``); it only matters when
+        ``streamed_migration`` is armed and the switch is priced
+        synchronously (``async_switching`` covers the announced path
+        with its own full-prefetch overlap)."""
         if old is None or old is new:
             return 0.0
         cfg = self.config
@@ -215,6 +232,16 @@ class RuntimeAdapter:
         if cfg.async_switching:
             # prefetch overlaps with ongoing execution; stall is the drain
             return cfg.switch_drain_s + max(0.0, load_t - old.latency)
+        if cfg.streamed_migration and bw != math.inf:
+            # DEFER-style send-compute-receive overlap: while the current
+            # plan keeps executing, a fraction of the link streams the
+            # next plan's weights ahead; only the non-overlapped
+            # remainder is exposed as stall
+            overlap = old.latency if overlap_s is None else max(overlap_s,
+                                                                0.0)
+            shipped = overlap * bw * cfg.stream_bw_fraction
+            exposed = max(0.0, nbytes - shipped) / bw
+            return cfg.switch_drain_s + exposed
         return cfg.switch_drain_s + load_t
 
     # -- Eqs. (7)-(8): horizon mixture LP -----------------------------------------
@@ -268,6 +295,9 @@ class RuntimeAdapter:
         trace: List[Dict[str, float]] = []
         speed: Dict[str, float] = {}
         bw: Dict[str, float] = {}
+        # streamed migration overlaps the next switch's weight transfer
+        # with the execution span just completed on the current plan
+        prev_exec = 0.0
         while done < total_iters and t < 10 * deadline:
             while events and events[0].t <= t:
                 ev = events.pop(0)
@@ -281,7 +311,9 @@ class RuntimeAdapter:
                 span = frac * delta
                 if span <= 0:
                     continue
-                stall = self.switch_cost(current, plan)
+                stall = self.switch_cost(
+                    current, plan,
+                    overlap_s=prev_exec if cfg.streamed_migration else None)
                 # migration is not free energy-wise: every device involved
                 # (old placement draining + new placement loading) keeps
                 # drawing idle power while it lasts — capped at the
@@ -303,6 +335,7 @@ class RuntimeAdapter:
                 energy += (plan.energy / plan.latency) * (iters * plan.latency)
                 spent += stall + iters * plan.latency
                 current = plan
+                prev_exec = iters * plan.latency
                 trace.append(dict(t=t, plan=id(plan), frac=frac, iters=iters,
                                   lat=plan.latency, stall=stall,
                                   exec_energy=plan.energy * iters))
@@ -329,10 +362,11 @@ class RuntimeAdapter:
         Without ``state`` the event is taken as the complete picture
         (the legacy single-event behavior). The fluctuation threshold
         compares the event against the accumulated state, not nominal.
+        (Thin adapter over :func:`repro.control.plane.react_once` —
+        the reaction layer lives in the control plane.)
         """
-        prior = state if state is not None else RuntimeState()
-        return self.react(current, prior.apply(event), prior.delta(event),
-                          replan_fn)
+        from ..control.plane import react_once
+        return react_once(self, current, event, replan_fn, state)
 
     def react(self, current: ParallelismPlan, conditions: RuntimeState,
               magnitude: float,

@@ -34,6 +34,10 @@ class DeviceProfile:
     n_accel: int = 1              # accelerators per node (TP stays in-node, §4.1)
     tp_efficiency: float = 0.85   # scaling efficiency of in-node TP
     compute_efficiency: float = 0.45  # achievable fraction of peak (MFU-ish)
+    #: finite battery budget in joules (None = wall-powered); drained by
+    #: the serving kernel's energy attribution when battery tracking is
+    #: armed (:class:`repro.control.plane.ControlConfig`)
+    battery_j: Optional[float] = None
 
     def effective_flops(self, tp_degree: int = 1) -> float:
         tp = min(max(tp_degree, 1), self.n_accel)

@@ -45,7 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -304,11 +304,15 @@ class FlashCrowdArrivals(ArrivalProcess):
 class RequestClass:
     """One SLO tier of a multi-class load (e.g. interactive vs. batch).
     ``slo_s=None`` inherits the load/scenario default SLO; ``weight`` is
-    the tier's relative share of arrivals."""
+    the tier's relative share of arrivals; ``priority > 0`` marks the
+    tier preemptive — with preemption armed
+    (:class:`~repro.control.plane.ControlConfig`) its requests jump
+    queued lower-priority admissions at the bottleneck stage."""
 
     name: str
     slo_s: Optional[float] = None
     weight: float = 1.0
+    priority: int = 0
 
     def __post_init__(self) -> None:
         if self.weight <= 0.0:
@@ -324,7 +328,7 @@ def interactive_batch(interactive_slo: float, batch_slo: float,
     if not 0.0 < interactive_share < 1.0:
         raise ValueError("interactive_share must be in (0, 1)")
     return (RequestClass("interactive", slo_s=interactive_slo,
-                         weight=interactive_share),
+                         weight=interactive_share, priority=1),
             RequestClass("batch", slo_s=batch_slo,
                          weight=1.0 - interactive_share))
 
@@ -338,6 +342,44 @@ def assign_classes(n_requests: int, classes: Sequence[RequestClass],
     rng = np.random.default_rng([0xC1A55, int(seed) & 0xFFFFFFFF])
     return rng.choice(len(classes), size=int(n_requests),
                       p=w / w.sum()).astype(np.int16)
+
+
+@dataclasses.dataclass(eq=False)
+class PreemptionSpec:
+    """Stage-level priority preemption for one :class:`Stream`.
+
+    ``class_id`` aligns with the stream's arrivals; ``interactive``
+    holds the indices of the priority classes (``priority > 0``);
+    ``overhead_s`` is the pipeline-state save/restore cost one
+    preemption bills the displaced batch request.
+    """
+
+    class_id: np.ndarray
+    interactive: FrozenSet[int]
+    overhead_s: float = 0.005
+
+    def __post_init__(self) -> None:
+        self.class_id = np.asarray(self.class_id)
+        if self.overhead_s < 0.0:
+            raise ValueError(f"overhead_s must be non-negative, "
+                             f"got {self.overhead_s}")
+
+
+def preemption_spec(classes: Sequence[RequestClass],
+                    class_id: Optional[np.ndarray],
+                    overhead_s: float = 0.005
+                    ) -> Optional[PreemptionSpec]:
+    """The :class:`PreemptionSpec` of a class-tiered load, or ``None``
+    when nothing can preempt (classless load, or no ``priority > 0``
+    tier) — callers then stay on the exact FIFO kernel path."""
+    if class_id is None or not classes:
+        return None
+    interactive = frozenset(i for i, c in enumerate(classes)
+                            if c.priority > 0)
+    if not interactive:
+        return None
+    return PreemptionSpec(class_id=class_id, interactive=interactive,
+                          overhead_s=overhead_s)
 
 
 # -- load ----------------------------------------------------------------------
@@ -595,7 +637,8 @@ class Stream:
     def __init__(self, arrivals: np.ndarray,
                  plan: Optional[ActivePlan] = None,
                  alive: bool = True,
-                 chunk: Optional[int] = None):
+                 chunk: Optional[int] = None,
+                 preempt: Optional[PreemptionSpec] = None):
         if chunk is not None and chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         self.arrivals = np.ascontiguousarray(arrivals, dtype=np.float64)
@@ -608,6 +651,28 @@ class Stream:
         self._i = 0
         self._starts: List[np.ndarray] = []
         self._finishes: List[np.ndarray] = []
+        # preemption is decided ONCE at construction: a spec whose trace
+        # carries no interactive request at all stays on the exact
+        # vectorized FIFO path (bit-identity with preemption unarmed)
+        self.preempt: Optional[PreemptionSpec] = None
+        if preempt is not None:
+            ids = np.asarray(preempt.class_id)
+            if len(ids) != len(self.arrivals):
+                raise ValueError(
+                    f"preempt.class_id length {len(ids)} differs from "
+                    f"{len(self.arrivals)} arrivals")
+            hot = np.isin(ids, list(preempt.interactive))
+            if hot.any():
+                self.preempt = preempt
+                self._hot = hot
+                self._fi = 0.0          # interactive admission frontier
+                self._fb = 0.0          # batch admission frontier
+                #: open interactive occupancy [start, end, charged]
+                self._windows: List[List[float]] = []
+                #: displaceable batch slots [req index, start, occ end]
+                self._pending: List[List[float]] = []
+                self._start_arr = np.zeros(len(self.arrivals))
+                self._fin_arr = np.zeros(len(self.arrivals))
 
     def serve_to(self, t: float) -> None:
         """Serve every pending arrival with ``a < t`` (events at
@@ -622,6 +687,9 @@ class Stream:
         moving state until ``max(next_free, t) + stall_s``."""
         if stall_s > 0.0:
             self.next_free = max(self.next_free, t) + stall_s
+            if self.preempt is not None:
+                self._fi = max(self._fi, t) + stall_s
+                self._fb = max(self._fb, t) + stall_s
 
     def _serve(self, j: int) -> None:
         i = self._i
@@ -633,27 +701,113 @@ class Stream:
         if not self.alive or self.plan is None:
             # degraded: the plan lost a device — requests fail outright,
             # consuming no pipeline capacity and no energy
-            self._starts.append(a.copy())
-            self._finishes.append(np.full(n, math.inf))
+            if self.preempt is not None:
+                self._start_arr[i:j] = a
+                self._fin_arr[i:j] = math.inf
+            else:
+                self._starts.append(a.copy())
+                self._finishes.append(np.full(n, math.inf))
             return
         p = self.plan
-        step = n if self.chunk is None else self.chunk
-        for c in range(0, n, step):
-            seg = a[c:c + step]
-            if len(seg) == 1:       # degenerate chunk = the old loop
-                start = np.asarray([max(float(seg[0]), self.next_free)])
-            else:
-                k = np.arange(len(seg), dtype=np.float64)
-                shifted = seg - p.interval * k
-                start = p.interval * k + np.maximum(
-                    self.next_free, np.maximum.accumulate(shifted))
-            self._starts.append(start)
-            self._finishes.append(start + p.latency)
-            self.next_free = float(start[-1]) + p.interval
+        if self.preempt is not None:
+            self._serve_preemptive(a, i)
+        else:
+            step = n if self.chunk is None else self.chunk
+            for c in range(0, n, step):
+                seg = a[c:c + step]
+                if len(seg) == 1:   # degenerate chunk = the old loop
+                    start = np.asarray([max(float(seg[0]), self.next_free)])
+                else:
+                    k = np.arange(len(seg), dtype=np.float64)
+                    shifted = seg - p.interval * k
+                    start = p.interval * k + np.maximum(
+                        self.next_free, np.maximum.accumulate(shifted))
+                self._starts.append(start)
+                self._finishes.append(start + p.latency)
+                self.next_free = float(start[-1]) + p.interval
         for d, e in p.non_idle_energy.items():
             self.service_energy[d] = self.service_energy.get(d, 0.0) + n * e
         for d, b in p.compute_busy.items():
             self.busy[d] = self.busy.get(d, 0.0) + n * b
+
+    def _serve_preemptive(self, a: np.ndarray, i0: int) -> None:
+        """The two-class priority sweep (scalar — preemption is a
+        per-request control decision, so the closed-form segment trick
+        doesn't apply; state carries across calls, so results stay
+        chunk- and segmentation-invariant).
+
+        Interactive requests run a pure Lindley recurrence on their own
+        frontier — they only ever queue behind other interactive
+        requests.  Batch requests chain on the batch frontier but (a)
+        may not *begin* inside a known interactive occupancy window
+        (the interactive is already holding the stage) and (b) are
+        *suspended* by every interactive window that opens strictly
+        inside their occupancy: each such preemption extends the slot
+        (and the request's finish) by the interactive's occupancy plus
+        the save/restore overhead.  An interactive arriving later whose
+        window opens inside an already-admitted pending slot displaces
+        it retroactively, re-propagating the chain of later pending
+        slots.  Each interactive window displaces at most one batch
+        slot (occupancies never overlap).
+        """
+        p = self.plan
+        interval, lat = p.interval, p.latency
+        oh = self.preempt.overhead_s
+        for k in range(len(a)):
+            i = i0 + k
+            t = float(a[k])
+            # windows fully in the past can no longer cover or suspend
+            # any future admission; settled batch slots are final
+            self._windows = [w for w in self._windows if w[1] > t]
+            self._pending = [s for s in self._pending if s[2] > t]
+            if self._hot[i]:
+                s = max(t, self._fi)
+                w = [s, s + interval, False]
+                # retroactive preemption: this window opens inside an
+                # already-admitted (still displaceable) batch slot
+                for kk, slot in enumerate(self._pending):
+                    if slot[1] < s < slot[2]:
+                        w[2] = True
+                        bump = interval + oh
+                        slot[2] += bump
+                        self._fin_arr[int(slot[0])] += bump
+                        prev_end = slot[2]
+                        for later in self._pending[kk + 1:]:
+                            if later[1] < prev_end:
+                                d = prev_end - later[1]
+                                later[1] += d
+                                later[2] += d
+                                self._start_arr[int(later[0])] += d
+                                self._fin_arr[int(later[0])] += d
+                            prev_end = later[2]
+                        self._fb = max(self._fb, prev_end)
+                        break
+                self._windows.append(w)
+                self._fi = s + interval
+                self._start_arr[i] = s
+                self._fin_arr[i] = s + lat
+            else:
+                s = max(t, self._fb)
+                moved = True
+                while moved:    # can't begin inside an interactive hold
+                    moved = False
+                    for w in self._windows:
+                        if w[0] <= s < w[1]:
+                            s = w[1]
+                            moved = True
+                end = s + interval
+                changed = True
+                while changed:  # known windows opening inside suspend it
+                    changed = False
+                    for w in self._windows:
+                        if not w[2] and s < w[0] < end:
+                            w[2] = True
+                            end += (w[1] - w[0]) + oh
+                            changed = True
+                self._start_arr[i] = s
+                self._fin_arr[i] = s + lat + (end - s - interval)
+                self._pending.append([float(i), s, end])
+                self._fb = end
 
     # -- results ----------------------------------------------------------------
     def served_through(self) -> int:
@@ -662,12 +816,19 @@ class Stream:
     def arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(arrival, start, finish) over every request served so far."""
         arr = self.arrivals[:self._i]
+        if self.preempt is not None:
+            return (arr, self._start_arr[:self._i].copy(),
+                    self._fin_arr[:self._i].copy())
         if not self._starts:
             return arr, arr.copy(), arr.copy()
         return (arr, np.concatenate(self._starts),
                 np.concatenate(self._finishes))
 
     def last_finite_finish(self) -> float:
+        if self.preempt is not None:
+            fin = self._fin_arr[:self._i]
+            fin = fin[np.isfinite(fin)]
+            return float(fin.max()) if len(fin) else 0.0
         out = 0.0
         for f in self._finishes:
             fin = f[np.isfinite(f)]
@@ -1076,6 +1237,7 @@ __all__ = [
     "DiurnalArrivals", "MMPPArrivals", "FlashCrowdArrivals",
     "poisson_arrivals",
     "RequestClass", "interactive_batch", "assign_classes",
+    "PreemptionSpec", "preemption_spec",
     "ServingLoad", "RequestRecord", "RequestLog",
     "ActivePlan", "freeze_plan", "service_interval",
     "Stream", "replay", "normalize_timeline", "describe_event",

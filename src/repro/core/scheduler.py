@@ -171,7 +171,11 @@ class NetworkScheduler:
     def _caps(self, scale: Optional[Dict[str, float]]) -> Dict[str, float]:
         caps = cep_resource_caps(self.topo)
         for k, s in (scale or {}).items():
-            caps[k] = caps[k] * s
+            # unknown resources are tolerated: a fleet tenant's
+            # cumulative state may carry shifts for links outside its
+            # current sub-topology
+            if k in caps:
+                caps[k] = caps[k] * s
         return caps
 
     def _reprice(self, plan: ParallelismPlan) -> None:

@@ -49,10 +49,12 @@ import dataclasses
 import json
 import math
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+from .control.plane import ControlConfig, ControlPlane
 from .core.adapter import (AdapterConfig, DynamicsEvent, RuntimeAdapter,
-                           RuntimeState, cold_load_stall)
+                           RuntimeState)
 from .core.cost_model import CostProvider, Workload
 from .core.device import Topology
 from .core.partitioner import PartitionerConfig
@@ -445,25 +447,6 @@ def compare(scenario: ScenarioRef,
                             outcomes=outcomes)
 
 
-def _remap_plan(plan: ParallelismPlan,
-                mapping: Dict[int, int]) -> Optional[ParallelismPlan]:
-    """Project a plan into a re-indexed fleet (for delta-switch pricing
-    across churn): stages keep only surviving devices, re-numbered via
-    ``mapping``. Returns ``None`` when no stage survives at all."""
-    stages = []
-    for s in plan.stages:
-        devs = [mapping[d] for d in s.devices if d in mapping]
-        if not devs:
-            continue
-        split = {mapping[d]: s.microbatch_split[d]
-                 for d in s.devices if d in mapping}
-        stages.append(dataclasses.replace(s, devices=devs,
-                                          microbatch_split=split))
-    if not stages:
-        return None
-    return dataclasses.replace(plan, stages=stages)
-
-
 @dataclasses.dataclass
 class ServeSession:
     """A planned deployment with its runtime adapter armed (§4.3).
@@ -510,6 +493,9 @@ class ServeSession:
     #: fresh search still runs whenever no surviving candidate is
     #: QoE-feasible on the new fleet
     warm_replan: bool = True
+    #: control-plane mechanism switches (priority preemption, battery
+    #: SoC, streamed migration); ``None`` = everything off
+    control: Optional[ControlConfig] = None
 
     def __post_init__(self) -> None:
         if not self.active:
@@ -518,25 +504,20 @@ class ServeSession:
             self.plan_fleet = self.active
         if not self.plans:
             self.plans = list(self.report.candidates)
+        #: the session's reaction layer — every dynamics decision
+        #: (state accumulation, replan/fallback, migration pricing)
+        #: lives there; the methods below are thin adapters over it
+        self.plane = ControlPlane(self, self.control)
 
     def _translate(self, state: RuntimeState) -> RuntimeState:
-        """Original-index conditions → plan-fleet index space.
-        Bandwidth entries for links that left with their devices are
-        filtered out (they come back into force on rejoin)."""
-        if self.plan_fleet == tuple(range(self.report.topology.n)):
-            return state
-        mapping = {orig: pos for pos, orig in enumerate(self.plan_fleet)}
-        alive = self.adapter.topo.resources
-        return RuntimeState(
-            compute_speed={mapping[d]: v
-                           for d, v in state.compute_speed.items()
-                           if d in mapping},
-            bandwidth_scale={k: v for k, v in state.bandwidth_scale.items()
-                             if k in alive})
+        """Original-index conditions → plan-fleet index space (adapter
+        over :meth:`ControlPlane.translate`)."""
+        return self.plane.translate(state)
 
     def on_dynamics(self, event: DynamicsEvent,
                     replan: bool = True) -> Tuple[ParallelismPlan, str, float]:
-        """Feed one runtime event to the adapter; track the active plan.
+        """Feed one runtime event to the control plane; track the
+        active plan.
 
         Returns (new plan, action taken, reaction seconds).  ``replan``
         permits full replanning on large shifts; small fluctuations are
@@ -544,111 +525,16 @@ class ServeSession:
         ``leave``/``join`` churn always replans (the fleet changed).
         The event is merged into the session's cumulative ``state``, so
         successive partial events compound instead of overwriting each
-        other.
+        other.  (Thin adapter over :meth:`ControlPlane.on_dynamics` —
+        the single reaction implementation.)
         """
-        if event.is_churn:
-            return self._on_churn(event)
-        if event.is_fault and not event.is_announced:
-            # silent fault: the session cannot observe it (that is the
-            # point of unannounced faults) — the resilience engine
-            # reacts on *detection*, never on onset
-            return self.current, "unobserved", 0.0
-        if self.degraded:
-            # no servable plan for the surviving fleet: absorb the
-            # conditions into state so a recovery replan sees them
-            self.state = self.state.apply(event)
-            return self.current, "degraded", 0.0
-        prior = self.state
-        merged = prior.apply(event)
-        replan_fn = (lambda: list(self.plans)) if replan else None
-        new, action, react = self.adapter.react(
-            self.current, self._translate(merged), prior.delta(event),
-            replan_fn)
-        self.state = merged
-        self.current = new
-        return new, action, react
+        return self.plane.on_dynamics(event, replan=replan)
 
     def _on_churn(self, event: DynamicsEvent
                   ) -> Tuple[ParallelismPlan, str, float]:
-        """Devices left/joined: replan from scratch on the new fleet."""
-        t0 = time.perf_counter()
-        full = self.report.topology
-        bad = [d for d in (*event.leave, *event.join)
-               if not (0 <= d < full.n)]
-        if bad:
-            raise ValueError(f"churn references unknown devices {bad} "
-                             f"(deployment has {full.n})")
-        fleet = (set(self.active) - set(event.leave)) | set(event.join)
-        if not fleet:
-            raise ValueError("churn event would remove every device")
-        merged = self.state.apply(event)
-        keep = tuple(sorted(fleet))
-        try:
-            sub, mapping = full.subset(keep)
-            # ``full`` is the session's calibrated topology, so the
-            # default (identity) cost provider is correct here —
-            # re-passing the original CostProvider would calibrate twice
-            planner = DoraPlanner(self.report.graph, sub, self.report.qoe,
-                                  partitioner_config=self.partitioner_config,
-                                  scheduler_config=self.scheduler_config,
-                                  adapter_config=self.adapter.config)
-            # plan-fleet device -> new-fleet device (drops leavers)
-            trans = {pos: mapping[orig]
-                     for pos, orig in enumerate(self.plan_fleet)
-                     if orig in mapping}
-            if self.warm_replan and not event.join:
-                # device-LEAVE churn is the latency-critical replan
-                # (capacity dropped mid-service): warm-start from the
-                # surviving candidate pool (§4.3 — steady-state replans
-                # are ~pool-sized), falling back to the fresh DP when
-                # nothing survives QoE-feasibly.  JOIN churn always runs
-                # the full search — surviving candidates place no work
-                # on the new device, so only a fresh DP can reclaim its
-                # capacity, and the old plan keeps serving meanwhile.
-                result = planner.replan(self.report.workload, self.plans,
-                                        mapping=trans)
-            else:
-                result = planner.plan(self.report.workload)
-        except (ValueError, RuntimeError):
-            # survivors disconnect the routed topology (Topology.subset)
-            # or admit no plan at all: go QoE-infeasible for this
-            # segment instead of crashing. ``plan_fleet`` keeps the old
-            # indexing so a later rejoin replans from it and recovers.
-            self.active = keep
-            self.state = merged
-            self.degraded = True
-            return self.current, "degraded", time.perf_counter() - t0
-        adapter = planner.make_adapter(result)
-        new = result.best
-        cond = RuntimeState(
-            compute_speed={mapping[d]: v
-                           for d, v in merged.compute_speed.items()
-                           if d in mapping},
-            bandwidth_scale={k: v
-                             for k, v in merged.bandwidth_scale.items()
-                             if k in planner.topo.resources})
-        if cond.compute_speed or cond.bandwidth_scale:
-            new = adapter.scheduler.refine(
-                new, compute_speed=dict(cond.compute_speed),
-                bandwidth_scale=dict(cond.bandwidth_scale))
-        # migration stall: the old plan re-indexed into the new fleet
-        # prices delta switching (layers already resident stay put)
-        proxy = _remap_plan(self.current, trans)
-        if proxy is not None:
-            stall = adapter.switch_cost(proxy, new)
-        else:   # nothing survives: cold-load the whole new plan
-            stall = cold_load_stall(new, sub, adapter.config)
-        new.meta["switch_stall_s"] = stall
-        new.meta["fleet"] = list(keep)
-        new.meta["warm_replan"] = result.warm_start
-        self.adapter = adapter
-        self.active = keep
-        self.plan_fleet = keep
-        self.degraded = False
-        self.state = merged
-        self.plans = list(result.candidates)
-        self.current = new
-        return new, "replan", time.perf_counter() - t0
+        """Devices left/joined: replan from scratch on the new fleet
+        (adapter over :meth:`ControlPlane.churn`)."""
+        return self.plane.churn(event)
 
     @property
     def meets_qoe(self) -> bool:
@@ -662,22 +548,34 @@ class ServeSession:
 
 
 def serve(scenario: ScenarioRef, *, warm_replan: bool = True,
+          control: Optional[ControlConfig] = None,
           **overrides) -> ServeSession:
     """Plan a scenario and arm the runtime adapter over its Pareto set.
 
     ``warm_replan=False`` forces churn events through the full fresh DP
     (the pre-warm-start behavior) — the planner benchmark uses it to
-    price cold vs. warm replans."""
+    price cold vs. warm replans.
+
+    ``control=`` arms control-plane mechanisms
+    (:class:`repro.control.ControlConfig`): priority preemption,
+    battery state of charge and DEFER-style streamed migration.  With
+    the default ``None`` every mechanism is off and the session behaves
+    exactly as before."""
     planner, sc, wl = planner_for(scenario, **overrides)
     result = planner.plan(wl)
     report = PlanReport(scenario=sc, topology=planner.topo,
                         graph=planner.graph, workload=wl, qoe=planner.qoe,
                         result=result)
     adapter = planner.make_adapter(result)
+    if control is not None and control.streamed_migration:
+        # the streamed-migration switch lives on the AdapterConfig so
+        # it survives churn replans (the config object is carried over)
+        adapter.config.streamed_migration = True
+        adapter.config.stream_bw_fraction = control.stream_bw_fraction
     return ServeSession(report=report, adapter=adapter, current=result.best,
                         partitioner_config=planner.partitioner.config,
                         scheduler_config=planner.scheduler.config,
-                        warm_replan=warm_replan)
+                        warm_replan=warm_replan, control=control)
 
 
 def calibrate(scenario: Optional[ScenarioRef] = None, *, quick: bool = True,
@@ -911,9 +809,28 @@ def simulate(scenario: ScenarioRef,
     return SimulationTrace(report=session.report, steps=steps)
 
 
+#: moved internals kept importable with a DeprecationWarning (the
+#: reaction layer now lives in ``repro.control``)
+_MOVED = {
+    "_remap_plan": "_remap_plan",
+}
+
+
+def __getattr__(name: str):
+    target = _MOVED.get(name)
+    if target is not None:
+        warnings.warn(
+            f"repro.dora.{name} moved to repro.control.plane.{target}; "
+            f"import it from there",
+            DeprecationWarning, stacklevel=2)
+        from .control import plane as _plane
+        return getattr(_plane, target)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "PlanReport", "ServeSession", "SimulationStep", "SimulationTrace",
     "StrategyOutcome", "ComparisonReport", "DEFAULT_COMPARISON",
-    "RuntimeState", "calibrate", "plan", "planner_for", "serve", "simulate",
-    "compare", "plan_fleet", "serve_fleet",
+    "ControlConfig", "RuntimeState", "calibrate", "plan", "planner_for",
+    "serve", "simulate", "compare", "plan_fleet", "serve_fleet",
 ]

@@ -22,14 +22,13 @@ tenant's candidate pool) plus the *fleet-level* cumulative picture:
 from __future__ import annotations
 
 import dataclasses
-import math
-import time
 from typing import Dict, List, Optional, Tuple
 
+from ..control.plane import FleetControlPlane, _remap_plan
 from ..core.adapter import DynamicsEvent, RuntimeAdapter, RuntimeState, \
     cold_load_stall
 from ..core.scheduler import NetworkScheduler
-from ..dora import ServeSession, _remap_plan
+from ..dora import ServeSession
 from .planner import FleetPlan, FleetPlanner, TenantPlan, _translate
 
 
@@ -69,6 +68,9 @@ class FleetSession:
         self.sessions: Dict[str, ServeSession] = {}
         for name, tp in plan.tenants.items():
             self.sessions[name] = self._arm_tenant(tp)
+        #: the fleet's reaction layer (event routing + rebalancing);
+        #: ``on_dynamics`` below is a thin adapter over it
+        self.plane = FleetControlPlane(self)
 
     # -- wiring -------------------------------------------------------------------
     def _arm_tenant(self, tp: TenantPlan,
@@ -93,8 +95,14 @@ class FleetSession:
     def _local_state(self, tp: TenantPlan,
                      merged: RuntimeState) -> RuntimeState:
         kw = _translate(merged, tp.mapping, tp.report.topology)
+        # bandwidth entries are retained wholesale (resource ids are
+        # fleet-global): a link outside the tenant's *current*
+        # sub-topology doesn't price its plan today, but the tenant may
+        # be rebalanced onto it later and must remember the shift —
+        # dropping entries here made tenant state diverge from the
+        # fleet's cumulative RuntimeState
         return RuntimeState(compute_speed=kw["compute_speed"],
-                            bandwidth_scale=kw["bandwidth_scale"])
+                            bandwidth_scale=dict(merged.bandwidth_scale))
 
     def _local_event(self, tp: TenantPlan,
                      event: DynamicsEvent) -> Optional[DynamicsEvent]:
@@ -128,123 +136,18 @@ class FleetSession:
         Churn always rebalances; condition shifts route to the owning
         tenants' adapters, then trigger a rebalance if some tenant is
         left QoE-infeasible (and ``FleetConfig.rebalance_on_load``).
-        Returns the actions taken, one per affected tenant.
+        Returns the actions taken, one per affected tenant.  (Thin
+        adapter over :meth:`FleetControlPlane.on_dynamics` — the single
+        reaction implementation.)
         """
-        if event.is_churn:
-            return self._rebalance(event)
-        merged = self.state.apply(event)
-        actions: List[TenantAction] = []
-        for name, tp in self.plan.tenants.items():
-            local = self._local_event(tp, event)
-            if local is None:
-                continue
-            sess = self.sessions[name]
-            new, act, react = sess.on_dynamics(local)
-            stall = (float(new.meta.get("switch_stall_s", 0.0))
-                     if act == "replan" else 0.0)
-            actions.append(TenantAction(tenant=name, action=act,
-                                        react_s=react, stall_s=stall,
-                                        latency_after=new.latency,
-                                        allotment=tp.allotment))
-        self.state = merged
-        if (self.planner.config.rebalance_on_load
-                and any(not s.meets_qoe for s in self.sessions.values())):
-            actions += self._rebalance(None)
-        return actions
+        return self.plane.on_dynamics(event)
 
     def _rebalance(self, event: Optional[DynamicsEvent]
                    ) -> List[TenantAction]:
         """Re-run the assignment search on the surviving fleet and move
-        devices between tenants; no-op when the incumbent assignment is
-        still the joint winner."""
-        t0 = time.perf_counter()
-        if event is not None:
-            full_n = self.planner.topo.n
-            bad = [d for d in (*event.leave, *event.join)
-                   if not (0 <= d < full_n)]
-            if bad:
-                raise ValueError(f"churn references unknown devices {bad} "
-                                 f"(fleet has {full_n})")
-            fleet = (set(self.active) - set(event.leave)) | set(event.join)
-            if len(fleet) < len(self.planner.tenants):
-                raise ValueError(
-                    f"churn leaves {sorted(fleet)}: not enough devices for "
-                    f"{len(self.planner.tenants)} exclusive tenants")
-            merged = self.state.apply(event)
-        else:
-            fleet = set(self.active)
-            merged = self.state
-        warm = {name: (list(sess.plans), self.plan.tenants[name].allotment)
-                for name, sess in self.sessions.items()}
-        conditions = merged if (merged.compute_speed
-                                or merged.bandwidth_scale) else None
-        new_plan = self.planner.plan(devices=sorted(fleet), warm=warm,
-                                     conditions=conditions,
-                                     include=[self.plan.assignments])
-        if (event is None
-                and new_plan.assignments == self.plan.assignments):
-            # load-shift probe: moving devices doesn't help — stay put
-            return []
-        actions: List[TenantAction] = []
-        old_plan = self.plan
-        # a kept session is only valid if its shared-link pricing is
-        # unchanged too — another tenant's move can change the medium's
-        # user count and with it this tenant's fair share
-        shares_of = self.planner.link_shares
-        old_shares = shares_of(list(old_plan.assignments.values()))
-        new_shares = shares_of(list(new_plan.assignments.values()))
-        new_sessions: Dict[str, ServeSession] = {}
-        for name, tp in new_plan.tenants.items():
-            old_tp = old_plan.tenants.get(name)
-            if (old_tp is not None and old_tp.allotment == tp.allotment
-                    and self.planner._factors_key(tp.allotment, old_shares)
-                    == self.planner._factors_key(tp.allotment, new_shares)):
-                # same allotment, same link shares: keep the tenant's
-                # adapted session (pareto pool and cumulative state are
-                # already right) — but a churn event can carry condition
-                # shifts too, and those must still reach the tenant
-                sess = self.sessions[name]
-                local = self._local_event(tp, event) \
-                    if event is not None else None
-                if local is not None:
-                    new, act, react = sess.on_dynamics(local)
-                    actions.append(TenantAction(
-                        tenant=name, action=act, react_s=react,
-                        stall_s=(float(new.meta.get("switch_stall_s", 0.0))
-                                 if act == "replan" else 0.0),
-                        latency_after=new.latency,
-                        allotment=tp.allotment))
-                new_sessions[name] = sess
-                continue
-            sess = self._arm_tenant(tp, state=self._local_state(tp, merged))
-            stall = 0.0
-            if old_tp is not None:
-                old_current = self.sessions[name].current
-                if (_orig_placement(old_current, old_tp)
-                        != _orig_placement(sess.current, tp)):
-                    # only a placement that actually moved pays migration
-                    stall = self._migration_stall(
-                        old_current, old_tp, tp, sess)
-            sess.current.meta["switch_stall_s"] = stall
-            sess.current.meta["fleet"] = list(tp.allotment)
-            new_sessions[name] = sess
-            actions.append(TenantAction(
-                tenant=name, action="rebalance",
-                react_s=time.perf_counter() - t0, stall_s=stall,
-                latency_after=sess.current.latency,
-                allotment=tp.allotment))
-        self.plan = new_plan
-        self.sessions = new_sessions
-        self.active = tuple(sorted(fleet))
-        self.state = merged
-        self.rebalances += 1
-        if event is not None and not actions:
-            # churn that didn't move any allotment still reacted
-            actions.append(TenantAction(
-                tenant="*", action="rebalance",
-                react_s=time.perf_counter() - t0, stall_s=0.0,
-                latency_after=math.nan, allotment=self.active))
-        return actions
+        devices between tenants (adapter over
+        :meth:`FleetControlPlane.rebalance`)."""
+        return self.plane.rebalance(event)
 
     def _migration_stall(self, old_current, old_tp: TenantPlan,
                          new_tp: TenantPlan, sess: ServeSession) -> float:

@@ -364,10 +364,8 @@ def run_chaos(*, sc, strategy: str, session, report, scheduler, load,
     detected_crashed: Set[int] = set()
     detected_links: Set[str] = set()
     fault_touched = False
-    from ..core.adapter import RuntimeState
-    static_state = RuntimeState()
-    static_fleet = set(range(topo.n))
-    static_devices = set(plan0.devices)
+    from ..control.plane import StaticPlane
+    static = StaticPlane(topo.n, plan0.devices)
 
     def current_frozen():
         """The *true* active plan: the believed plan re-priced under
@@ -390,15 +388,15 @@ def run_chaos(*, sc, strategy: str, session, report, scheduler, load,
                     plan, compute_speed=speed,
                     bandwidth_scale=dict(cond.bandwidth_scale))
             return kernel.freeze_plan(plan, session.plan_fleet, topo)
-        if not (static_devices <= static_fleet):
+        if not static.alive:
             return None
-        speed = dict(static_state.compute_speed)
+        speed = dict(static.state.compute_speed)
         speed.update({d: f for d, f in true_speed.items()
                       if speed.get(d, 1.0) != f})
-        if speed or static_state.bandwidth_scale:
+        if speed or static.state.bandwidth_scale:
             plan = scheduler.evaluate_fair(
                 report.best, compute_speed=speed,
-                bandwidth_scale=dict(static_state.bandwidth_scale))
+                bandwidth_scale=dict(static.state.bandwidth_scale))
         else:
             plan = report.best
         return kernel.freeze_plan(plan, range(topo.n), topo)
@@ -448,52 +446,6 @@ def run_chaos(*, sc, strategy: str, session, report, scheduler, load,
         return (stream.plan.latency
                 if stream.plan is not None
                 and stream.mode in ("ok", "brownout") else math.inf)
-
-    def react_to_detection(rec) -> Tuple[str, float, float]:
-        """Dora's reaction to one detected fault. Returns
-        (action, react_s, stall_s)."""
-        nonlocal ladder
-        kind, tgt = rec["kind"], rec["target"]
-        if kind == "crash":
-            if tgt not in session.active:
-                return "unobserved", 0.0, 0.0
-            t0 = time.perf_counter()
-            if ladder is not None:
-                stall = ladder.apply({tgt})
-                if stall is not None:
-                    ladder.build()       # background refresh of scopes
-                    return "fallback", time.perf_counter() - t0, stall
-            # naive replan-on-detect: the dead pipeline cannot overlap
-            # the prefetch, so the switch is priced synchronously
-            cfg = session.adapter.config
-            prev_async = cfg.async_switching
-            cfg.async_switching = False
-            try:
-                new, act, react = session.on_dynamics(
-                    DynamicsEvent(t=rec["t"], leave=(tgt,)))
-            finally:
-                session.adapter.config.async_switching = prev_async
-                cfg.async_switching = prev_async
-            stall = (float(new.meta.get("switch_stall_s", 0.0))
-                     if act == "replan" else 0.0)
-            if ladder is not None:
-                ladder.build()
-            return act, react, stall
-        if kind in ("link_down", "link_up"):
-            scale = (config.link_down_scale if kind == "link_down" else 1.0)
-            ev = DynamicsEvent(t=rec["t"] + config.detection_window_s,
-                               bandwidth_scale={tgt: scale})
-            new, act, react = session.on_dynamics(ev)
-            stall = (float(new.meta.get("switch_stall_s", 0.0))
-                     if act == "replan" else 0.0)
-            return act, react, stall
-        # straggler (or its recovery): the believed speed realigns
-        ev = DynamicsEvent(t=rec["t"] + config.detection_window_s,
-                           compute_speed={tgt: rec.get("factor", 1.0)})
-        new, act, react = session.on_dynamics(ev)
-        stall = (float(new.meta.get("switch_stall_s", 0.0))
-                 if act == "replan" else 0.0)
-        return act, react, stall
 
     for t, prio, _seq, kind, payload in entries:
         stream.serve_to(t)
@@ -546,11 +498,7 @@ def run_chaos(*, sc, strategy: str, session, report, scheduler, load,
                     ladder.build()       # fleet changed: refresh scopes
             else:
                 t0 = time.perf_counter()
-                static_state = static_state.apply(ev)
-                static_fleet.difference_update(ev.leave)
-                static_fleet.update(ev.join)
-                act = ("repriced" if static_devices <= static_fleet
-                       else "degraded")
+                act = "repriced" if static.apply(ev) else "degraded"
                 react = time.perf_counter() - t0
             refresh()
             actions.append(AdapterAction(
@@ -572,7 +520,9 @@ def run_chaos(*, sc, strategy: str, session, report, scheduler, load,
             detected_links.discard(tgt)
         was_broken = stream.mode in ("blind", "down")
         if dora_mode and recovery != "none":
-            act, react, stall = react_to_detection(rec)
+            # detection-time recovery is the control plane's job
+            act, react, stall = session.plane.on_detection(
+                rec, config=config, ladder=ladder)
             if act not in ("degraded", "unobserved") \
                     and not session.meets_qoe:
                 act = "brownout"         # adopted, but QoE-infeasible
@@ -845,11 +795,13 @@ def run_chaos_fleet(*, fs, session, loads, timeline,
                         handled = True
                 if not handled:
                     # naive replan-on-detect: tenants on the dead device
-                    # can't overlap the weight prefetch with serving
+                    # can't overlap the weight prefetch with serving,
+                    # nor stream ahead of the switch
                     from ..core.adapter import AdapterConfig
                     prev_cfg = session.planner.adapter_config
                     cfg = dataclasses.replace(prev_cfg or AdapterConfig(),
-                                              async_switching=False)
+                                              async_switching=False,
+                                              streamed_migration=False)
                     session.planner.adapter_config = cfg
                     try:
                         extra = dispatch(

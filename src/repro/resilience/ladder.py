@@ -19,9 +19,8 @@ interactive) instead of raising.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, List, Optional, Tuple
+from typing import Dict, FrozenSet, Optional, Tuple
 
-from ..core.adapter import RuntimeState
 from ..core.planner import DoraPlanner
 
 
@@ -98,36 +97,13 @@ class FallbackLadder:
         Returns the stall (drain only — fallback weights are
         prestaged), or ``None`` when no feasible entry exists for this
         exact scope (caller falls back to naive replan / brownout).
-        Mirrors ``ServeSession._on_churn``'s bookkeeping.
+        Adoption itself lives on the control plane
+        (:meth:`ControlPlane.adopt_fallback`).
         """
         entry = self.lookup(lost)
         if entry is None or entry.result is None:
             return None
-        session = self.session
-        adapter = entry.planner.make_adapter(entry.result)
-        new = entry.result.best
-        merged = session.state
-        cond = RuntimeState(
-            compute_speed={entry.mapping[d]: v
-                           for d, v in merged.compute_speed.items()
-                           if d in entry.mapping},
-            bandwidth_scale={k: v for k, v in merged.bandwidth_scale.items()
-                             if k in entry.planner.topo.resources})
-        if cond.compute_speed or cond.bandwidth_scale:
-            new = adapter.scheduler.refine(
-                new, compute_speed=dict(cond.compute_speed),
-                bandwidth_scale=dict(cond.bandwidth_scale))
-        stall = adapter.config.switch_drain_s
-        new.meta["switch_stall_s"] = stall
-        new.meta["fleet"] = list(entry.keep)
-        new.meta["fallback"] = True
-        session.adapter = adapter
-        session.active = entry.keep
-        session.plan_fleet = entry.keep
-        session.degraded = False
-        session.plans = list(entry.result.candidates)
-        session.current = new
-        return stall
+        return self.session.plane.adopt_fallback(entry)
 
 
 class FleetLadder:
@@ -162,50 +138,12 @@ class FleetLadder:
         return self.entries.get(frozenset(lost))
 
     def apply(self, lost) -> Optional[list]:
-        """Adopt the precomputed fleet plan for ``lost``: mirrors
-        ``FleetSession._rebalance`` adoption, but every moved tenant
-        pays only the drain (fallback weights are prestaged).  Returns
-        the tenant actions, or ``None`` when no entry covers the scope.
-        """
-        from ..fleet.session import TenantAction, _orig_placement
-
+        """Adopt the precomputed fleet plan for ``lost``: every moved
+        tenant pays only the drain (fallback weights are prestaged).
+        Returns the tenant actions, or ``None`` when no entry covers
+        the scope.  Adoption itself lives on the control plane
+        (:meth:`FleetControlPlane.adopt_fallback`)."""
         new_plan = self.lookup(lost)
         if new_plan is None:
             return None
-        session = self.session
-        old_plan = session.plan
-        shares_of = session.planner.link_shares
-        old_shares = shares_of(list(old_plan.assignments.values()))
-        new_shares = shares_of(list(new_plan.assignments.values()))
-        actions: List[TenantAction] = []
-        new_sessions = {}
-        for name, tp in new_plan.tenants.items():
-            old_tp = old_plan.tenants.get(name)
-            if (old_tp is not None and old_tp.allotment == tp.allotment
-                    and session.planner._factors_key(tp.allotment, old_shares)
-                    == session.planner._factors_key(tp.allotment,
-                                                    new_shares)):
-                new_sessions[name] = session.sessions[name]
-                continue
-            sess = session._arm_tenant(
-                tp, state=session._local_state(tp, session.state))
-            stall = 0.0
-            if old_tp is not None:
-                old_current = session.sessions[name].current
-                if (_orig_placement(old_current, old_tp)
-                        != _orig_placement(sess.current, tp)):
-                    # prestaged: drain only, no weight load
-                    stall = sess.adapter.config.switch_drain_s
-            sess.current.meta["switch_stall_s"] = stall
-            sess.current.meta["fleet"] = list(tp.allotment)
-            sess.current.meta["fallback"] = True
-            new_sessions[name] = sess
-            actions.append(TenantAction(
-                tenant=name, action="fallback", react_s=0.0, stall_s=stall,
-                latency_after=sess.current.latency, allotment=tp.allotment))
-        session.plan = new_plan
-        session.sessions = new_sessions
-        session.active = tuple(sorted(
-            set(session.active) - frozenset(lost)))
-        session.rebalances += 1
-        return actions
+        return self.session.plane.adopt_fallback(lost, new_plan)

@@ -291,6 +291,14 @@ register_generated(
                 "dips (lossy_mesh family, seed 24).")
 
 register_generated(
+    "battery_constrained", seed=12, name="battery_constrained",
+    description="Generated battery-constrained fleet: six devices on a "
+                "shared home medium, four running off finite batteries "
+                "the serving load drains mid-horizon — exercises the "
+                "control plane's SoC tracking and pre-death evacuation "
+                "(battery_constrained family, seed 12).")
+
+register_generated(
     "faulty_sites", seed=16, name="faulty_sites",
     description="Generated chaos site: seven devices on a partial "
                 "wifi mesh whose timeline carries unannounced "

@@ -33,6 +33,9 @@ Built-in families:
 ``faulty_sites``          chaos archetype: edge sites under *unannounced*
                           failures — crash-stop devices, link flaps and
                           silent stragglers (see :mod:`repro.resilience`)
+``battery_constrained``   battery-powered fleets: finite per-device energy
+                          stores (``DeviceProfile.battery_j``) the serving
+                          load drains (see :mod:`repro.control.battery`)
 ``mixed_train_serve``     fleet family: a fine-tuning tenant co-deployed with
                           serving tenants (see :func:`generate_fleet`)
 ========================  ====================================================
@@ -173,6 +176,13 @@ class FamilySpec:
     #: dynamics-event kinds the timeline is composed from
     dynamics: Tuple[str, ...] = ("bw_dip", "throttle", "churn")
     max_events: int = 3
+    #: probability any one device runs on battery (a finite
+    #: ``DeviceProfile.battery_j`` store the serving kernel's energy
+    #: attribution drains — see ``repro.control.battery``)
+    battery_p: float = 0.0
+    #: battery capacity drawn as seconds of the device's own idle draw,
+    #: so deaths land within simulated horizons regardless of class
+    battery_idle_s: Tuple[float, float] = (120.0, 900.0)
 
 
 FAMILIES: Dict[str, FamilySpec] = {}
@@ -256,6 +266,25 @@ _family(FamilySpec(
 ))
 
 
+_family(FamilySpec(
+    name="battery_constrained",
+    description="Battery-powered fleets: phones and boards serving off "
+                "finite energy stores the request load drains — the "
+                "control plane's SoC mechanisms' native habitat.",
+    topologies=("shared", "star"),
+    techs=("wifi", "5g"),
+    device_classes=("phone", "board", "dgpu"),
+    n_devices=(3, 6), modes=("serve",),
+    models=("bert", "tiny_lm_8", "tiny_lm_4"),
+    qoe_slack=(2.0, 8.0),
+    energy_budget_p=0.5,
+    dynamics=("bw_dip", "throttle"),
+    max_events=2,
+    battery_p=0.5,
+    battery_idle_s=(45.0, 240.0),
+))
+
+
 def list_families() -> List[str]:
     """Names of all generator families, sorted."""
     return sorted(FAMILIES)
@@ -295,6 +324,10 @@ class ScenarioParams:
     #   churn_join/mobility plus the unannounced fault kinds
     #   crash/link_down/link_up/straggler; target is a resource name
     #   or device index
+    #: battery-backed devices as (device, capacity joules); empty for
+    #: wall-powered fleets — drawn last so pre-battery families keep
+    #: byte-identical summaries
+    batteries: Tuple[Tuple[int, float], ...] = ()
 
     @property
     def name(self) -> str:
@@ -307,6 +340,11 @@ class ScenarioParams:
         edges = ",".join(f"{a}-{b}" for a, b in self.edges) or "-"
         evs = ";".join(f"{k}@{g6(t)}:{tgt}={g6(v)}"
                        for k, t, tgt, v in self.events) or "-"
+        # only battery-drawing families carry the segment: pre-battery
+        # summaries must stay byte-identical
+        batt = ("" if not self.batteries else
+                " batt=" + ",".join(f"{d}:{g6(j)}"
+                                    for d, j in self.batteries))
         return (f"{self.name} topo={self.topology_family} tech={self.tech} "
                 f"devs=[{','.join(self.device_names)}] throttle={thr} "
                 f"link={g6(self.link_mbps)}Mbps/{g6(self.link_latency_s * 1e3)}ms "
@@ -316,13 +354,15 @@ class ScenarioParams:
                 f"qoe=t{g6(self.t_qoe)}/"
                 f"e{g6(self.e_qoe) if self.e_qoe is not None else 'None'}/"
                 f"lam{g6(self.lam)} rate={g6(self.request_rate)} "
-                f"events={evs}")
+                f"events={evs}{batt}")
 
     # -- builders -------------------------------------------------------------
     def devices(self) -> List[DeviceProfile]:
         devs = [CATALOG[n] for n in self.device_names]
         for d, f in self.throttles:
             devs[d] = dataclasses.replace(devs[d], flops=devs[d].flops * f)
+        for d, j in self.batteries:
+            devs[d] = dataclasses.replace(devs[d], battery_j=j)
         return devs
 
     def build_topology(self) -> Topology:
@@ -614,6 +654,15 @@ def sample_params(family: str, seed: int) -> ScenarioParams:
             events.append(("straggler", t, str(d), 1.0))
     events.sort(key=lambda e: e[1])
 
+    # batteries draw LAST and only for battery families: every draw
+    # before this point replays the exact pre-battery RNG stream, so
+    # existing families' golden summaries stay byte-identical
+    batteries: Tuple[Tuple[int, float], ...] = ()
+    if spec.battery_p > 0.0:
+        batteries = tuple(
+            (d, round(devs[d].p_idle * rng.uniform(*spec.battery_idle_s), 1))
+            for d in range(n) if rng.random() < spec.battery_p)
+
     return ScenarioParams(
         family=family, seed=seed, topology_family=topology_family,
         tech=tech, device_names=device_names, throttles=throttles,
@@ -621,7 +670,7 @@ def sample_params(family: str, seed: int) -> ScenarioParams:
         model=model, mode=mode, seq_len=seq_len, global_batch=global_batch,
         microbatch_size=microbatch, optimizer_mult=optimizer_mult,
         t_qoe=t_qoe, e_qoe=e_qoe, lam=lam, request_rate=request_rate,
-        events=tuple(events))
+        events=tuple(events), batteries=batteries)
 
 
 def scenario_from_params(params: ScenarioParams, *,

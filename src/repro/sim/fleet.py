@@ -189,6 +189,7 @@ def simulate_fleet(fleet, *,
                    faults=None,
                    resilience=None,
                    recovery: str = "ladder",
+                   control=None,
                    **overrides) -> FleetTrace:
     """Run one multi-tenant request-level serving simulation.
 
@@ -208,6 +209,12 @@ def simulate_fleet(fleet, *,
     (a :class:`~repro.resilience.FaultScript` or fault-carrying
     timeline events) delegates the run to the multi-tenant chaos
     engine with detection-latency-aware recovery.
+
+    ``control=`` (a :class:`~repro.control.plane.ControlConfig`) arms
+    kernel-side priority preemption per tenant — ``priority > 0``
+    request classes jump queued batch admissions on their tenant's
+    pipeline.  Battery SoC is single-tenant only (use
+    :func:`simulate_requests`).
     """
     from .. import dora            # local import: dora lazily imports sims
     from ..fleet import resolve_fleet
@@ -264,10 +271,17 @@ def simulate_fleet(fleet, *,
         return kernel.freeze_plan(session.sessions[name].current,
                                   tp.allotment, topo)
 
-    streams: Dict[str, kernel.Stream] = {
-        n: kernel.Stream(tenant_loads[n].sample_arrivals(),
-                         plan=freeze(n), chunk=chunk)
-        for n in names}
+    streams: Dict[str, kernel.Stream] = {}
+    for n in names:
+        t_load = tenant_loads[n]
+        t_arr = t_load.sample_arrivals()
+        preempt = None
+        if control is not None and control.preemption:
+            preempt = kernel.preemption_spec(
+                t_load.classes, t_load.sample_class_ids(len(t_arr)),
+                control.preempt_overhead_s)
+        streams[n] = kernel.Stream(t_arr, plan=freeze(n), chunk=chunk,
+                                   preempt=preempt)
     actions: List[FleetAction] = []
     presence = kernel.PresenceTracker(topo.n)
     ownership = kernel.OwnershipTracker(session.plan.assignments)

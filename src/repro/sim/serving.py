@@ -55,7 +55,9 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from ..core.adapter import DynamicsEvent, RuntimeState
+from ..control.battery import SOC_CHECK_LABEL, BatteryTracker
+from ..control.plane import ControlConfig, StaticPlane
+from ..core.adapter import DynamicsEvent
 from ..core.scheduler import NetworkScheduler
 from ..core import events as kernel
 from ..core.events import (DEFAULT_N_REQUESTS, AdapterAction, RequestLog,
@@ -87,6 +89,7 @@ def simulate_requests(scenario,
                       faults=None,
                       resilience=None,
                       recovery: str = "ladder",
+                      control: Optional[ControlConfig] = None,
                       **overrides) -> ServingTrace:
     """Run one request-level serving simulation.
 
@@ -118,6 +121,19 @@ def simulate_requests(scenario,
     fallback plan, background warm replan) or ``"replan"`` (naive
     replan-on-detect).  With no fault content this function is
     bit-identical to the plain Lindley kernel path.
+
+    **Control plane.** ``control=`` (a
+    :class:`~repro.control.plane.ControlConfig`, defaulting to the
+    session's own) arms the within-plan mechanisms: ``preemption``
+    lets ``priority > 0`` request classes jump queued batch admissions
+    at the bottleneck stage; ``battery`` integrates per-device SoC
+    (``DeviceProfile.battery_j``) against the kernel's energy
+    attribution at ``soc_check_interval_s`` checkpoints, kills emptied
+    devices mid-run, and — with ``battery_aware`` — evacuates them
+    *before* the projected death.  With every mechanism off this is
+    bit-identical to the historical path.  Chaos runs ignore the
+    sim-side mechanisms (streamed migration, which lives in the
+    adapter, still applies).
     """
     from .. import dora  # local import: dora lazily imports this module
 
@@ -184,18 +200,66 @@ def simulate_requests(scenario,
                          recovery=recovery)
 
     # static-strategy runtime view (the dora path keeps its own inside
-    # the ServeSession)
-    static_state = RuntimeState()
-    static_fleet = set(range(topo.n))
-    static_devices = set(active.devices)
+    # the ServeSession's ControlPlane)
+    static = StaticPlane(topo.n, active.devices)
 
-    stream = kernel.Stream(arr, plan=active, chunk=chunk)
+    if control is None and session is not None:
+        control = session.control
+
+    class_id = load.sample_class_ids(len(arr))
+    preempt = None
+    if control is not None and control.preemption:
+        preempt = kernel.preemption_spec(load.classes, class_id,
+                                         control.preempt_overhead_s)
+
+    battery: Optional[BatteryTracker] = None
+    present = set(range(topo.n))
+    if control is not None and control.battery:
+        if strategy != "dora":
+            raise ValueError("battery tracking needs the adaptive dora "
+                             "strategy (the control plane reacts to SoC)")
+        battery = BatteryTracker(topo.devices)
+        if not battery.capacity:
+            battery = None          # no battery-backed device to track
+    if battery is not None:
+        # inject SoC checkpoints; fire() intercepts them by label
+        # *before* they could reach the session's reaction path (an
+        # empty event would otherwise trigger a refine)
+        t_hi = max([float(arr[-1]) if len(arr) else 0.0,
+                    *(ev.t for _, ev in timeline)])
+        step = control.soc_check_interval_s
+        checks = [(SOC_CHECK_LABEL, DynamicsEvent(t=k * step))
+                  for k in range(1, int(t_hi / step) + 1)]
+        timeline = sorted(timeline + checks, key=lambda kv: kv[1].t)
+
+    stream = kernel.Stream(arr, plan=active, chunk=chunk, preempt=preempt)
     presence = kernel.PresenceTracker(topo.n)
     actions: List[AdapterAction] = []
 
     def fire(label: str, ev: DynamicsEvent) -> None:
-        nonlocal static_state
+        if battery is not None and label == SOC_CHECK_LABEL:
+            newly = battery.advance(ev.t, stream.service_energy, present)
+            for lbl, bev, act, react, stall in session.plane.on_soc(
+                    ev.t, battery, newly_dead=newly, config=control):
+                presence.apply(bev)
+                present.difference_update(bev.leave)
+                present.update(bev.join)
+                stream.stall(bev.t, stall)
+                if act == "degraded" or session.degraded:
+                    stream.alive = False
+                    lat = math.inf
+                else:
+                    stream.alive = True
+                    stream.plan = kernel.freeze_plan(
+                        session.current, session.plan_fleet, topo)
+                    lat = stream.plan.latency
+                actions.append(AdapterAction(
+                    t=ev.t, label=lbl, action=act, react_s=react,
+                    stall_s=stall, latency_after=lat))
+            return
         presence.apply(ev)
+        present.difference_update(ev.leave)
+        present.update(ev.join)
         if strategy == "dora":
             new, act, react = session.on_dynamics(ev)
             stall = (float(new.meta.get("switch_stall_s", 0.0))
@@ -217,17 +281,14 @@ def simulate_requests(scenario,
             return
         # static baseline: merge conditions, apply churn, reprice
         t0 = time.perf_counter()
-        static_state = static_state.apply(ev)
-        static_fleet.difference_update(ev.leave)
-        static_fleet.update(ev.join)
-        stream.alive = static_devices <= static_fleet
+        stream.alive = static.apply(ev)
         if not stream.alive:
             act, lat = "degraded", math.inf
         else:
             repriced = scheduler.evaluate_fair(
                 report.best,
-                compute_speed=dict(static_state.compute_speed),
-                bandwidth_scale=dict(static_state.bandwidth_scale))
+                compute_speed=dict(static.state.compute_speed),
+                bandwidth_scale=dict(static.state.bandwidth_scale))
             stream.plan = kernel.freeze_plan(repriced, range(topo.n), topo)
             act, lat = "repriced", stream.plan.latency
         actions.append(AdapterAction(t=ev.t, label=label, action=act,
@@ -247,7 +308,8 @@ def simulate_requests(scenario,
             + dev.p_idle * idle_s.get(d, 0.0)
 
     log = RequestLog(arr_out, starts, finishes,
-                     class_id=load.sample_class_ids(len(arr_out)),
+                     class_id=(class_id[:len(arr_out)]
+                               if class_id is not None else None),
                      classes=load.classes)
     return ServingTrace(scenario=sc.name, strategy=strategy, load=load,
                         slo_s=slo, requests=log, actions=actions,

@@ -25,6 +25,15 @@ def test_pipeline_executor_matches_sequential():
 
 
 @pytest.mark.slow
+def test_streamed_migration_model_vs_executed_pipeline():
+    """Calibration twin: the DEFER streamed-switch pricing model held to
+    an *executed* pipeline iteration's span (see the helper docstring)."""
+    res = _run("stream_overlap_check.py")
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "STREAM_OVERLAP_OK" in res.stdout
+
+
+@pytest.mark.slow
 def test_elastic_restart_8_to_4_devices():
     res = _run("elastic_check.py")
     assert res.returncode == 0, res.stdout + res.stderr
